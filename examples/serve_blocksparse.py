@@ -1,0 +1,60 @@
+"""Batched serving with continuous batching + the retained-block
+(local+global) KV cache -- the paper's static block sparsity making
+long-context decode O(window).
+
+    PYTHONPATH=src python examples/serve_blocksparse.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.models.model import LM
+from repro.serve import Engine, Request
+
+
+def main():
+    cfg = configs.smoke("llama3_2_1b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    print("== continuous batching: 6 requests through 2 slots ==")
+    eng = Engine(lm, params, batch=2, max_len=96)
+    reqs = [Request(uid=i,
+                    prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, size=8 + 4 * i),
+                    max_new_tokens=6 + i)
+            for i in range(6)]
+    order = []
+    eng.run(reqs, on_finish=lambda r: order.append(r.uid))
+    for r in reqs:
+        print(f"  req {r.uid}: prompt {len(r.prompt)} toks -> "
+              f"{len(r.output)} generated {r.output[:8]}...")
+    print(f"  finish order: {order} (shorter budgets finish first)")
+
+    print("== retained-block cache: decode far past the cache length ==")
+    import dataclasses
+    import jax.numpy as jnp
+    cfg_l = dataclasses.replace(cfg, retained_prefix=16,
+                                retained_window=48)
+    lm_l = LM(cfg_l)
+    params_l = lm_l.init(jax.random.PRNGKey(0))
+    cache_len = cfg_l.retained_prefix + cfg_l.retained_window
+    caches = lm_l.init_cache(1, cache_len)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    for pos in (0, 50, 500, 5000, 500_000):
+        lg, caches = lm_l.decode_step(
+            params_l, tok, caches,
+            jnp.asarray([pos], jnp.int32), retained=True)
+        print(f"  position {pos:>7d}: cache stays {cache_len} slots, "
+              f"logits finite={bool(jnp.isfinite(lg.astype(jnp.float32)).all())}")
+    print("done. (500k-token decode with a 64-slot cache: the long_500k "
+          "cells lower exactly this path at production shapes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-param LM with block-sparse FFNs for a
+few hundred steps and compare against the dense baseline at equal step
+count -- the paper's technique as a first-class training feature.
+
+    PYTHONPATH=src python examples/sparse_pretrain.py --steps 200
+
+(defaults are sized for this CPU container: a reduced-width model and a
+small token budget; pass --full for the ~100M config if you have time.)
+Fault tolerance is live: ctrl-C / SIGTERM checkpoints, rerun resumes.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+
+from repro.launch.train import train_loop
+from repro.models.config import LayerSpec, ModelCfg
+from repro.train.step import TrainHParams
+
+
+def make_cfg(*, full: bool, sparse: bool) -> ModelCfg:
+    spec = LayerSpec(mixer="attn", ffn="sparse" if sparse else "mlp")
+    if full:
+        # ~100M params: 12L x 512 wide, 32k vocab
+        dims = dict(d_model=512, d_ff=2048, num_heads=8, num_kv_heads=4,
+                    head_dim=64, vocab_size=32000, layers=12)
+    else:
+        dims = dict(d_model=256, d_ff=1024, num_heads=4, num_kv_heads=2,
+                    head_dim=64, vocab_size=2048, layers=4)
+    return ModelCfg(
+        name=f"sparse-pretrain-{'sparse' if sparse else 'dense'}",
+        family="dense",
+        d_model=dims["d_model"], vocab_size=dims["vocab_size"],
+        num_heads=dims["num_heads"], num_kv_heads=dims["num_kv_heads"],
+        head_dim=dims["head_dim"], d_ff=dims["d_ff"],
+        groups=(((spec,), dims["layers"]),),
+        ffn_density=0.25, ffn_block_size=16,
+        attn_tile_q=128, attn_tile_kv=128,
+        dtype="float32",        # CPU-friendly numerics for the example
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/sparse_pretrain_ckpt")
+    ap.add_argument("--skip-dense", action="store_true")
+    args = ap.parse_args()
+
+    hp = TrainHParams(peak_lr=1e-3, warmup_steps=max(1, args.steps // 10),
+                      total_steps=args.steps)
+
+    print("=== block-sparse FFN model (density 0.25, b=16) ===")
+    cfg_s = make_cfg(full=args.full, sparse=True)
+    _, losses_s = train_loop(
+        cfg_s, steps=args.steps, batch_per_shard=args.batch, seq=args.seq,
+        ckpt_dir=os.path.join(args.ckpt_dir, "sparse"), hp=hp,
+        log_every=max(1, args.steps // 10))
+
+    if not args.skip_dense:
+        print("=== dense baseline (same arch, dense FFN) ===")
+        cfg_d = make_cfg(full=args.full, sparse=False)
+        _, losses_d = train_loop(
+            cfg_d, steps=args.steps, batch_per_shard=args.batch,
+            seq=args.seq, ckpt_dir=os.path.join(args.ckpt_dir, "dense"),
+            hp=hp, log_every=max(1, args.steps // 10))
+        print(f"\nsparse: {losses_s[0]:.3f} -> {losses_s[-1]:.3f} | "
+              f"dense: {losses_d[0]:.3f} -> {losses_d[-1]:.3f} | "
+              f"sparse FFN FLOPs = 25% of dense")
+    else:
+        print(f"\nsparse: {losses_s[0]:.3f} -> {losses_s[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.analysis.hlo_cost import analyze_hlo_text  # noqa: F401
+from repro.analysis.roofline import roofline_terms, V5E  # noqa: F401

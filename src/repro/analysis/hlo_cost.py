@@ -1,0 +1,449 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every ``while`` body exactly once, so
+a model whose layers run under ``lax.scan`` under-reports FLOPs by the
+trip count (verified experimentally; see EXPERIMENTS.md §Methodology).
+This module re-derives the three roofline inputs from
+``compiled.as_text()`` -- the post-SPMD, post-fusion, *per-device*
+module -- with while-loop trip counts multiplied through:
+
+* ``flops``            dot/convolution (exact from dnums) + elementwise
+* ``bytes``            HloCostAnalysis-style: operands + result per op
+                       (fusion internals excluded -- they live in VMEM)
+* ``collective_bytes`` all-gather / all-reduce / reduce-scatter /
+                       all-to-all / collective-permute, result-shape bytes
+                       (per collective opcode in ``collectives``)
+
+Trip counts come from the loop condition computation (compare against a
+constant -- the shape every ``lax.scan``/``fori_loop`` lowers to); loops
+whose bound cannot be recovered are counted once and recorded in
+``warnings``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+(?:\(.*\))?\s*->.*{")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "compare", "select", "and", "or",
+    "xor", "not", "sign", "floor", "ceil", "round-nearest-afz", "remainder",
+    "atan2", "clamp", "cosine", "sine", "erf", "logistic", "cbrt",
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    by_name: Dict[str, Op] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        self.transcendentals += other.transcendentals
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    self.collective_bytes * k,
+                    {n: v * k for n, v in self.collectives.items()},
+                    self.transcendentals * k)
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str]:
+    """Split 'operand list ) , attrs' respecting nesting."""
+    depth = 0
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                ops, attrs = rest[:i], rest[i + 1:]
+                break
+            depth -= 1
+    else:
+        ops, attrs = rest, ""
+    names = re.findall(r"%([\w\.\-]+)", ops)
+    return names, attrs
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        operands, attrs = _split_operands(rest)
+        op = Op(name, opcode, type_str, operands, attrs, line)
+        cur.ops.append(op)
+        cur.by_name[name] = op
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _dims_attr(attrs: str, key: str) -> List[int]:
+    m = re.search(key + r"=\{([\d,]*)\}", attrs)
+    if not m or not m.group(1):
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+class Analyzer:
+    def __init__(self, comps: Dict[str, Computation], *,
+                 vmem_dims: Optional[set] = None):
+        self.comps = comps
+        self.memo: Dict[str, Cost] = {}
+        self.warnings: List[str] = []
+        # tensors whose trailing dims are in vmem_dims are priced as
+        # VMEM-resident (zero HBM bytes): the fused-flash-attention view,
+        # where score-space tiles never leave the chip (the Pallas
+        # kernels/bs_attn contract).  FLOPs are unaffected.
+        self.vmem_dims = vmem_dims or set()
+
+    def _sb(self, type_str: str) -> float:
+        if self.vmem_dims:
+            dtype, dims = _first_shape(type_str)
+            if len(dims) >= 2 and tuple(dims[-2:]) in self.vmem_dims:
+                return 0.0
+        return _shape_bytes(type_str)
+
+    def _fusion_operand_bytes(self, comp: Computation, op: Op,
+                              callee: "Computation") -> float:
+        """Operand bytes for a fusion, pricing parameters that are only
+        consumed by dynamic-slice/gather *inside* the fusion at their
+        sliced size (XLA reads just the slice, not the buffer)."""
+        params = {}
+        for cop in callee.ops:
+            if cop.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", cop.line)
+                if m:
+                    params[int(m.group(1))] = cop.name
+        consumers: Dict[str, List[Op]] = {}
+        for cop in callee.ops:
+            for o in cop.operands:
+                consumers.setdefault(o, []).append(cop)
+
+        def slice_reads(name, depth=0):
+            """If every (transitive, through layout-free ops) consumer of
+            ``name`` is a dynamic-slice/gather, return the sliced bytes;
+            else None."""
+            if depth > 4:
+                return None
+            cons = consumers.get(name, [])
+            if not cons:
+                return None
+            total = 0.0
+            for cop in cons:
+                if cop.opcode in ("dynamic-slice", "gather"):
+                    total += self._sb(cop.type_str)
+                elif cop.opcode in ("bitcast", "reshape"):
+                    sub = slice_reads(cop.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        total = 0.0
+        for i, oname in enumerate(op.operands):
+            full = self._sb(self._operand_type(comp, oname))
+            pname = params.get(i)
+            sliced = slice_reads(pname) if pname else None
+            total += sliced if sliced is not None else full
+        return total
+
+    # -- shape lookup -------------------------------------------------------
+    def _operand_type(self, comp: Computation, name: str) -> str:
+        op = comp.by_name.get(name)
+        return op.type_str if op else ""
+
+    # -- trip count -----------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> Optional[int]:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return None
+        consts = {}
+        for op in comp.ops:
+            if op.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    consts[op.name] = int(m.group(1))
+        for op in comp.ops:
+            if op.opcode == "compare" and "direction=LT" in op.attrs:
+                for o in op.operands:
+                    if o in consts:
+                        return consts[o]
+        return None
+
+    def _called(self, attrs: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+        return m.group(1) if m else None
+
+    # -- per-op flops -----------------------------------------------------------
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        _, out_dims = _first_shape(op.type_str)
+        lhs_t = self._operand_type(comp, op.operands[0]) if op.operands else ""
+        _, lhs_dims = _first_shape(lhs_t)
+        contr = _dims_attr(op.attrs, "lhs_contracting_dims")
+        k = 1
+        for d in contr:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        n = 1
+        for d in out_dims:
+            n *= d
+        return 2.0 * n * k
+
+    def _conv_flops(self, comp: Computation, op: Op) -> float:
+        _, out_dims = _first_shape(op.type_str)
+        rhs_t = self._operand_type(comp, op.operands[1]) \
+            if len(op.operands) > 1 else ""
+        _, rhs_dims = _first_shape(rhs_t)
+        n = 1
+        for d in out_dims:
+            n *= d
+        k = 1
+        for d in rhs_dims[:-1]:   # kernel spatial x in-channels (approx)
+            k *= d
+        return 2.0 * n * k
+
+    # -- computation cost ----------------------------------------------------
+    def _flops_only(self, comp_name: str) -> float:
+        """FLOPs including fusion internals (dots inside fusions)."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                total += self._conv_flops(comp, op)
+            elif op.opcode in _ELEMENTWISE:
+                total += _numel(op.type_str)
+            elif op.opcode == "fusion":
+                callee = self._called(op.attrs, "calls")
+                if callee:
+                    total += self._flops_only(callee)
+        return total
+
+    def cost(self, comp_name: str) -> Cost:
+        if comp_name in self.memo:
+            return self.memo[comp_name]
+        comp = self.comps.get(comp_name)
+        c = Cost()
+        if comp is None:
+            return c
+        self.memo[comp_name] = c   # breaks cycles defensively
+        for op in comp.ops:
+            if op.opcode in _SKIP_BYTES:
+                continue
+            opnd_bytes = sum(
+                self._sb(self._operand_type(comp, o))
+                for o in op.operands)
+            res_bytes = self._sb(op.type_str)
+            if op.opcode == "while":
+                body = self._called(op.attrs, "body")
+                cond = self._called(op.attrs, "condition")
+                # primary source: XLA's own analysis in backend_config
+                m = re.search(r'known_trip_count[^0-9]*(\d+)', op.attrs)
+                trip = int(m.group(1)) if m else None
+                if trip is None and cond:
+                    trip = self._trip_count(cond)
+                if trip is None:
+                    trip = 1
+                    self.warnings.append(
+                        f"while {op.name}: trip count unknown, counted once")
+                inner = Cost()
+                if body:
+                    inner += self.cost(body)
+                if cond:
+                    inner += self.cost(cond)
+                c += inner.scaled(trip)
+                continue
+            if op.opcode in ("call", "async-start"):
+                callee = self._called(op.attrs, "to_apply") or \
+                    self._called(op.attrs, "calls")
+                if callee:
+                    c += self.cost(callee)
+                continue
+            if op.opcode == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      op.attrs)
+                names = re.findall(r"%([\w\.\-]+)",
+                                   branches[0]) if branches else []
+                sub = [self.cost(b) for b in names]
+                if sub:
+                    worst = max(sub, key=lambda x: x.flops + x.bytes)
+                    c += worst
+                continue
+            # leaf-ish ops -- in-place / slicing ops touch only the moved
+            # region, not the whole buffer (XLA aliases loop buffers)
+            if op.opcode in ("dynamic-update-slice", "scatter",
+                             "scatter-add"):
+                upd = (self._sb(self._operand_type(comp, op.operands[1]))
+                       if len(op.operands) > 1 else 0.0)
+                c.bytes += 3.0 * upd   # read slice + read update + write
+                continue
+            if op.opcode in ("dynamic-slice", "gather"):
+                c.bytes += 2.0 * res_bytes
+                continue
+            if op.opcode == "fusion":
+                callee_name = self._called(op.attrs, "calls")
+                callee = self.comps.get(callee_name)
+                root = callee.ops[-1] if callee and callee.ops else None
+                if root is not None and root.opcode in (
+                        "dynamic-update-slice", "scatter"):
+                    # in-place rooted fusion: drop the aliased big operand
+                    alias = max((
+                        self._sb(self._operand_type(comp, o))
+                        for o in op.operands), default=0.0)
+                    small = max(opnd_bytes - alias, 0.0)
+                    c.bytes += small + max(res_bytes - alias, 0.0) + \
+                        2.0 * _update_bytes(callee, root)
+                    c.flops += self._flops_only(callee_name)
+                    continue
+                if callee is not None:
+                    c.bytes += self._fusion_operand_bytes(
+                        comp, op, callee) + res_bytes
+                    c.flops += self._flops_only(callee_name)
+                    continue
+            c.bytes += opnd_bytes + res_bytes
+            if op.opcode in _COLLECTIVES:
+                opc = op.opcode.replace("-start", "")
+                moved = max(res_bytes, opnd_bytes)
+                c.collective_bytes += moved
+                c.collectives[opc] = c.collectives.get(opc, 0.0) + moved
+            elif op.opcode == "dot":
+                c.flops += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                c.flops += self._conv_flops(comp, op)
+            elif op.opcode == "fusion":
+                callee = self._called(op.attrs, "calls")
+                if callee:
+                    c.flops += self._flops_only(callee)
+            elif op.opcode in _ELEMENTWISE:
+                c.flops += _numel(op.type_str)
+        self.memo[comp_name] = c
+        return c
+
+
+def _update_bytes(callee: "Computation", root: "Op") -> float:
+    """Bytes of the update operand of a DUS/scatter fusion root."""
+    if len(root.operands) > 1:
+        upd = callee.by_name.get(root.operands[1])
+        if upd is not None:
+            return _shape_bytes(upd.type_str)
+    return _shape_bytes(root.type_str) * 0.1  # conservative fallback
+
+
+def _numel(type_str: str) -> float:
+    _, dims = _first_shape(type_str)
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n)
+
+
+def analyze_hlo_text(text: str, *, vmem_dims=None) -> dict:
+    """Full-module loop-aware cost.  Entry = the ENTRY computation.
+
+    ``vmem_dims``: optional set of trailing-2-dim tuples priced as
+    VMEM-resident (fused-kernel view; see Analyzer).
+    """
+    comps = parse_hlo(text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda k: len(comps[k].ops)) if comps else None
+    if entry is None:
+        return dict(flops=0.0, bytes=0.0, collective_bytes=0.0,
+                    collectives={}, warnings=["no computations parsed"])
+    an = Analyzer(comps, vmem_dims=vmem_dims)
+    c = an.cost(entry)
+    return dict(flops=c.flops, bytes=c.bytes,
+                collective_bytes=c.collective_bytes,
+                collectives=c.collectives, warnings=an.warnings,
+                num_computations=len(comps))

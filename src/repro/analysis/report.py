@@ -1,0 +1,89 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.analysis.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = None, tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*{tag}.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if tag and not base.endswith(tag):
+            continue
+        if not tag and len(parts[2].split("_")) > 1 and parts[2] not in (
+                "16x16", "2x16x16"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def _fmt_ms(s):
+    return f"{s*1e3:10.2f}"
+
+
+def table(recs, *, fmt: str = "md") -> str:
+    rows = []
+    hdr = ["arch", "shape", "mesh", "t_comp(ms)", "t_mem(ms)",
+           "t_coll(ms)", "bound", "useful_frac", "roofline_frac"]
+    for r in recs:
+        ro = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{ro['t_compute']*1e3:.2f}", f"{ro['t_memory']*1e3:.2f}",
+            f"{ro['t_collective']*1e3:.2f}", ro["dominant"],
+            f"{ro.get('useful_flop_frac', 0):.3f}",
+            f"{ro.get('roofline_frac', 0):.4f}"])
+    if fmt == "md":
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(map(str, row)) + " |" for row in rows]
+        return "\n".join(out)
+    w = [max(len(str(x)) for x in [h] + [row[i] for row in rows])
+         for i, h in enumerate(hdr)]
+    out = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+    out += ["  ".join(str(x).ljust(w[i]) for i, x in enumerate(row))
+            for row in rows]
+    return "\n".join(out)
+
+
+def interesting_cells(recs):
+    """The three hillclimb picks per the brief."""
+    ranked = sorted((r for r in recs if "roofline_frac" in r["roofline"]),
+                    key=lambda r: r["roofline"]["roofline_frac"])
+    worst = ranked[0] if ranked else None
+    coll = max(recs, key=lambda r: r["roofline"]["t_collective"] /
+               max(r["roofline"]["bound_seconds"], 1e-12))
+    return worst, coll
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--fmt", default="txt", choices=["md", "txt"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load_records(args.mesh, tag=args.tag)
+    print(table(recs, fmt=args.fmt))
+    if recs:
+        worst, coll = interesting_cells(recs)
+        print(f"\nworst roofline frac: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline']['roofline_frac']:.4f})")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline terms from dry-run artifacts (TPU v5e target constants).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+The analyzer inputs are already per-device (post-SPMD module), so no
+further division by chip count is needed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float
+    hbm_bw: float
+    ici_bw: float
+
+
+V5E = HwSpec("tpu-v5e", 197e12, 819e9, 50e9)
+
+
+def roofline_terms(cost: dict, hw: HwSpec = V5E, *, model_flops_per_device:
+                   float | None = None) -> dict:
+    t_compute = cost["flops"] / hw.peak_flops_bf16
+    t_memory = cost["bytes"] / hw.hbm_bw
+    t_collective = cost["collective_bytes"] / hw.ici_bw
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    out = dict(t_compute=t_compute, t_memory=t_memory,
+               t_collective=t_collective, dominant=dominant,
+               bound_seconds=max(terms.values()))
+    if model_flops_per_device is not None and cost["flops"] > 0:
+        out["model_flops"] = model_flops_per_device
+        out["useful_flop_frac"] = model_flops_per_device / cost["flops"]
+        # roofline fraction: useful work at peak / achievable step time
+        out["roofline_frac"] = (model_flops_per_device / hw.peak_flops_bf16
+                                ) / max(terms.values())
+    return out
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    """6·N·D for a train step (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_forward(n_active_params: int, tokens: int) -> float:
+    """2·N·D for inference (prefill/decode)."""
+    return 2.0 * n_active_params * tokens

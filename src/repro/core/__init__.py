@@ -1,0 +1,23 @@
+"""PopSparse-on-TPU core: block-sparse matmul library (the paper's contribution).
+
+Public surface:
+
+* ``BlockSparseMatrix``        -- BSR container (static or dynamic pattern)
+* ``static_sparse.spmm(_nt)``  -- compile-time-pattern SpMM (paper §3.2)
+* ``dynamic_sparse.dspmm(_nt)``-- runtime-pattern SpMM with d_max capacity (§3.3)
+* ``partitioner`` / ``planner``-- compile-time work distribution (§3.2/§3.3)
+* ``tp``                       -- the partitioning lifted to the mesh
+* ``sparse_layers``            -- SparseLinear / SparseFFN / DynamicSparseLinear
+* ``masks`` / ``pruning``      -- pattern generation + sparse training
+"""
+from repro.core.bsr import BlockSparseMatrix, dense_flops, sparse_flops  # noqa: F401
+from repro.core import (  # noqa: F401
+    dynamic_sparse,
+    masks,
+    partitioner,
+    planner,
+    pruning,
+    sparse_layers,
+    static_sparse,
+    tp,
+)

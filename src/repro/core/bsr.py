@@ -1,0 +1,186 @@
+"""Block-sparse (BSR-like) matrix container.
+
+The paper defines the sparse operand as ``(M ⊙ W)`` where ``M`` is derived
+from a block mask ``M_hat`` of block size ``b`` (PopSparse §3).  This module
+provides the canonical container used across the library:
+
+* ``values``  -- ``[nnz, b, b]`` the non-zero blocks, row-major ordered
+* ``row_idx`` -- ``[nnz]`` block-row index of each block
+* ``col_idx`` -- ``[nnz]`` block-col index of each block
+
+For **static** sparsity (pattern fixed at compile time, paper §3.2) the
+index arrays are host ``numpy`` arrays: they are trace-time constants and
+get folded into the compiled program, exactly like PopSparse's ahead-of-
+time partitioning.  For **dynamic** sparsity (paper §3.3) the indices are
+device arrays and only ``nnz_max`` (from ``d_max``) is static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Union[np.ndarray, jax.Array]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockSparseMatrix:
+    """A block-sparse matrix of logical shape ``(m, k)`` with ``b x b`` blocks.
+
+    ``values[z]`` is the dense content of block ``(row_idx[z], col_idx[z])``.
+    Blocks are expected in row-major (row, then col) order; ``sort_blocks``
+    enforces this.  ``m`` and ``k`` must be multiples of ``block_size`` (the
+    library pads upstream if needed, mirroring the paper's ceil-div masks).
+    """
+
+    values: Array          # [nnz, b, b]
+    row_idx: Array         # [nnz] int32 (block row)
+    col_idx: Array         # [nnz] int32 (block col)
+    shape: Tuple[int, int] # (m, k) -- static aux data
+    block_size: int        # b      -- static aux data
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.row_idx, self.col_idx), (self.shape, self.block_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, row_idx, col_idx = children
+        shape, block_size = aux
+        return cls(values, row_idx, col_idx, shape, block_size)
+
+    # -- basic properties --------------------------------------------------
+    @property
+    def nnz_blocks(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        m, k = self.shape
+        b = self.block_size
+        return (_ceil_div(m, b), _ceil_div(k, b))
+
+    @property
+    def density(self) -> float:
+        mb, kb = self.grid
+        if mb * kb == 0:
+            return 0.0
+        return self.nnz_blocks / float(mb * kb)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def is_static(self) -> bool:
+        """True when the pattern is a host constant (compile-time known)."""
+        return isinstance(self.row_idx, np.ndarray)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_dense(cls, dense: Array, block_size: int,
+                   *, keep_mask: np.ndarray | None = None,
+                   static: bool = True) -> "BlockSparseMatrix":
+        """Extract non-zero ``b x b`` blocks from a dense ``[m, k]`` matrix.
+
+        ``keep_mask`` (block grid, bool) overrides automatic non-zero
+        detection; with ``static=True`` the pattern is computed on host.
+        """
+        m, k = dense.shape
+        b = block_size
+        if m % b or k % b:
+            raise ValueError(f"shape {dense.shape} not divisible by block {b}")
+        mb, kb = m // b, k // b
+        if keep_mask is None:
+            host = np.asarray(dense)
+            blocked = host.reshape(mb, b, kb, b).transpose(0, 2, 1, 3)
+            keep_mask = np.abs(blocked).sum(axis=(2, 3)) != 0
+        keep_mask = np.asarray(keep_mask, dtype=bool)
+        if keep_mask.shape != (mb, kb):
+            raise ValueError(f"mask shape {keep_mask.shape} != grid {(mb, kb)}")
+        rows, cols = np.nonzero(keep_mask)  # row-major order guaranteed
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        blocked = jnp.asarray(dense).reshape(mb, b, kb, b).transpose(0, 2, 1, 3)
+        values = blocked[rows, cols]
+        if static:
+            return cls(values, rows.astype(np.int32), cols.astype(np.int32),
+                       (m, k), b)
+        return cls(values, jnp.asarray(rows, jnp.int32),
+                   jnp.asarray(cols, jnp.int32), (m, k), b)
+
+    @classmethod
+    def from_mask(cls, mask: np.ndarray, block_size: int, *,
+                  dtype=jnp.float32, init: str = "zeros",
+                  key: jax.Array | None = None) -> "BlockSparseMatrix":
+        """Allocate a BSR matrix for a given block mask (values zero/random)."""
+        mb, kb = mask.shape
+        b = block_size
+        rows, cols = np.nonzero(np.asarray(mask, bool))
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order].astype(np.int32), cols[order].astype(np.int32)
+        nnz = len(rows)
+        if init == "zeros":
+            values = jnp.zeros((nnz, b, b), dtype)
+        elif init == "normal":
+            if key is None:
+                raise ValueError("init='normal' requires key")
+            values = jax.random.normal(key, (nnz, b, b), dtype)
+        else:
+            raise ValueError(init)
+        return cls(values, rows, cols, (mb * b, kb * b), b)
+
+    @classmethod
+    def random(cls, key: jax.Array, m: int, k: int, block_size: int,
+               density: float, *, dtype=jnp.float32,
+               pattern_seed: int = 0) -> "BlockSparseMatrix":
+        """Random pattern + normal values, PopSparse benchmark style."""
+        from repro.core import masks  # local import to avoid cycle
+        mask = masks.random_block_mask(m, k, block_size, density,
+                                       seed=pattern_seed)
+        return cls.from_mask(mask, block_size, dtype=dtype, init="normal",
+                             key=key)
+
+    # -- conversions ---------------------------------------------------------
+    def to_dense(self) -> jax.Array:
+        m, k = self.shape
+        b = self.block_size
+        mb, kb = self.grid
+        out = jnp.zeros((mb, kb, b, b), self.values.dtype)
+        rows = jnp.asarray(self.row_idx)
+        cols = jnp.asarray(self.col_idx)
+        out = out.at[rows, cols].add(jnp.asarray(self.values))
+        return out.transpose(0, 2, 1, 3).reshape(m, k)
+
+    def block_mask(self) -> np.ndarray:
+        """Host-side block mask (static patterns only)."""
+        if not self.is_static:
+            raise ValueError("block_mask() requires a static pattern")
+        mb, kb = self.grid
+        mask = np.zeros((mb, kb), bool)
+        mask[self.row_idx, self.col_idx] = True
+        return mask
+
+    def with_values(self, values: Array) -> "BlockSparseMatrix":
+        return BlockSparseMatrix(values, self.row_idx, self.col_idx,
+                                 self.shape, self.block_size)
+
+    def astype(self, dtype) -> "BlockSparseMatrix":
+        return self.with_values(jnp.asarray(self.values).astype(dtype))
+
+
+def dense_flops(m: int, k: int, n: int) -> int:
+    return 2 * m * k * n
+
+
+def sparse_flops(m: int, k: int, n: int, density: float) -> float:
+    """Useful FLOPs per the paper (§3): ``2*m*k*n*d`` -- block-size free."""
+    return 2.0 * m * k * n * density

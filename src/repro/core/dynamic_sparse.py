@@ -1,0 +1,172 @@
+"""Dynamic block-sparse matmul (PopSparse §3.3, Appendix A.2) -- public API.
+
+Only the *maximum density* ``d_max`` is fixed at compile time; the pattern
+is data.  The compile-time planner (``planner.plan_dynamic``) sizes fixed
+buckets; the runtime **encoder** (the paper's "host utility", here a
+jittable device function) packs the pattern into fixed-size slot arrays:
+
+    values  [S, b, b]   non-zero blocks (zero-padded)
+    row_idx [S]         block-row per slot
+    col_idx [S]         block-col per slot
+
+Padded slots carry zero values at (row 0, col 0): they contribute exactly
+zero, which is the TPU analogue of the paper's overflow/propagation steps
+-- the hardware still *executes* them (fixed grid), it just does no useful
+work.  That cost asymmetry (dynamic pays padded slots + runtime encode,
+static pays nothing) reproduces the paper's static-vs-dynamic gap by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner as planner_lib
+from repro.core.bsr import BlockSparseMatrix
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DynamicOperand:
+    """Fixed-capacity encoded sparse operand (bucketed, runtime pattern)."""
+
+    values: jax.Array    # [S, b, b]
+    row_idx: jax.Array   # [S] int32
+    col_idx: jax.Array   # [S] int32
+    nnz: jax.Array       # [] int32 -- true block count this step
+    shape: Tuple[int, int]
+    block_size: int
+
+    def tree_flatten(self):
+        return ((self.values, self.row_idx, self.col_idx, self.nnz),
+                (self.shape, self.block_size))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def grid(self):
+        b = self.block_size
+        return (self.shape[0] // b, self.shape[1] // b)
+
+    def to_dense(self) -> jax.Array:
+        mb, kb = self.grid
+        b = self.block_size
+        out = jnp.zeros((mb, kb, b, b), self.values.dtype)
+        out = out.at[self.row_idx, self.col_idx].add(self.values)
+        return out.transpose(0, 2, 1, 3).reshape(self.shape)
+
+
+def encode(dense_w: jax.Array, block_mask: jax.Array, *, block_size: int,
+           nnz_max: int) -> DynamicOperand:
+    """Runtime encoder: pack masked blocks of ``dense_w`` into ``nnz_max``
+    slots.  Jit-compatible (static output shapes); overflowing blocks
+    beyond capacity are dropped lowest-priority-last, mirroring bucket
+    overflow in the paper.
+
+    ``block_mask``: [mb, kb] bool (may be traced).
+    """
+    m, k = dense_w.shape
+    b = block_size
+    mb, kb = m // b, k // b
+    flat = block_mask.reshape(-1)
+    # stable order: active blocks first, in row-major order
+    order = jnp.argsort(~flat, stable=True)
+    sel = order[:nnz_max]
+    count = jnp.minimum(jnp.sum(flat.astype(jnp.int32)), nnz_max)
+    valid = jnp.arange(nnz_max) < count
+    rows = jnp.where(valid, sel // kb, 0).astype(jnp.int32)
+    cols = jnp.where(valid, sel % kb, 0).astype(jnp.int32)
+    blocked = dense_w.reshape(mb, b, kb, b).transpose(0, 2, 1, 3)
+    vals = blocked[rows, cols] * valid[:, None, None].astype(dense_w.dtype)
+    return DynamicOperand(vals, rows, cols, count, (m, k), b)
+
+
+def encode_from_bsr(bsr: BlockSparseMatrix, *, nnz_max: int) -> DynamicOperand:
+    """Encode an existing (possibly static) BSR into fixed capacity slots."""
+    nnz = bsr.nnz_blocks
+    if nnz > nnz_max:
+        raise ValueError(f"nnz {nnz} exceeds capacity {nnz_max}")
+    b = bsr.block_size
+    pad = nnz_max - nnz
+    vals = jnp.concatenate(
+        [jnp.asarray(bsr.values),
+         jnp.zeros((pad, b, b), bsr.values.dtype)], axis=0)
+    rows = jnp.concatenate([jnp.asarray(bsr.row_idx, jnp.int32),
+                            jnp.zeros((pad,), jnp.int32)])
+    cols = jnp.concatenate([jnp.asarray(bsr.col_idx, jnp.int32),
+                            jnp.zeros((pad,), jnp.int32)])
+    return DynamicOperand(vals, rows, cols, jnp.asarray(nnz, jnp.int32),
+                          bsr.shape, b)
+
+
+# ---------------------------------------------------------------------------
+# Matmul -- same contraction as static, with runtime (traced) indices.
+# segment_sum becomes a scatter-add; gathers are dynamic.  Differentiable
+# w.r.t. values and x (indices are integer data).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _dspmm(values, row_idx, col_idx, x, mb: int, b: int):
+    n = x.shape[-1]
+    kb = x.shape[0] // b
+    xb = x.reshape(kb, b, n)
+    gathered = jnp.take(xb, col_idx, axis=0)
+    partial = jnp.einsum("zab,zbn->zan", values, gathered)
+    y = jax.ops.segment_sum(partial, row_idx, num_segments=mb)
+    return y.reshape(mb * b, n)
+
+
+def _dspmm_fwd(values, row_idx, col_idx, x, mb, b):
+    return _dspmm(values, row_idx, col_idx, x, mb, b), \
+        (values, row_idx, col_idx, x)
+
+
+def _dspmm_bwd(mb, b, res, dy):
+    values, row_idx, col_idx, x = res
+    n = x.shape[-1]
+    kb = x.shape[0] // b
+    dyb = dy.reshape(mb, b, n)
+    xb = x.reshape(kb, b, n)
+    dyg = jnp.take(dyb, row_idx, axis=0)
+    xg = jnp.take(xb, col_idx, axis=0)
+    dvalues = jnp.einsum("zan,zbn->zab", dyg, xg).astype(values.dtype)
+    partial = jnp.einsum("zab,zan->zbn", values, dyg)
+    dx = jax.ops.segment_sum(partial, col_idx, num_segments=kb)
+    return dvalues, None, None, dx.reshape(kb * b, n).astype(x.dtype)
+
+
+_dspmm.defvjp(_dspmm_fwd, _dspmm_bwd)
+
+
+def dspmm(op: DynamicOperand, x: jax.Array, *, backend: str = "xla",
+          interpret: bool = False) -> jax.Array:
+    """``Y = decode(op) @ X`` with ``X: [k, n]`` -> ``Y: [m, n]``."""
+    if x.shape[0] != op.shape[1]:
+        raise ValueError(f"X rows {x.shape[0]} != k {op.shape[1]}")
+    mb = op.shape[0] // op.block_size
+    if backend == "xla":
+        return _dspmm(op.values, op.row_idx, op.col_idx, x, mb,
+                      op.block_size)
+    if backend == "pallas":
+        from repro.kernels.dsmm import ops as dsmm_ops
+        return dsmm_ops.dsmm(op, x, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def dspmm_nt(op: DynamicOperand, x: jax.Array, **kw) -> jax.Array:
+    """Activation-major form ``x: [..., k] -> [..., m]``."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, op.shape[1]).T
+    y = dspmm(op, x2, **kw)
+    return y.T.reshape(*lead, op.shape[0])

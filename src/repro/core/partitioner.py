@@ -1,0 +1,229 @@
+"""Static-sparsity partitioner (PopSparse §3.2, Fig. 1a).
+
+The paper's static partitioner knows the sparsity pattern at compile time
+and exploits it twice:
+
+1. it splits the contraction (``k``) dimension at **uneven** positions so
+   every partition holds the *same number of non-zeros* (perfect load
+   balance, no runtime redistribution);
+2. it re-orders the non-zero values once, at weight-upload time, to match
+   the on-device distribution, so no extra exchange is needed at runtime.
+
+On TPU the two consumers of this information are
+
+* the **Pallas grid** -- logical ``b x b`` blocks are packed into MXU-
+  aligned tiles; the exact list of non-empty tiles becomes the (compile-
+  time constant) grid metadata, so the kernel executes *only* useful
+  steps (``pack_tiles``);
+* the **mesh** -- the ``model`` axis takes one nnz-balanced k-range each
+  (``balanced_k_splits`` + ``shard_blocks_by_k``), so tensor-parallel
+  SpMM needs a single output ``psum`` -- the paper's "final reduction
+  across tiles", lifted to the pod level.
+
+Everything here runs on host numpy at trace time: it *is* the compile-
+time step of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsr import BlockSparseMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePacking:
+    """Logical blocks packed into physical (tm, tk) tiles.
+
+    ``tile_rows/tile_cols`` are host constants listing the non-empty tiles
+    in row-major order (every output row-tile is covered -- empty rows get
+    one zero tile so the kernel always writes every output block).
+    ``num_tiles`` is the static grid extent.
+    """
+
+    tile_rows: np.ndarray     # [T] int32
+    tile_cols: np.ndarray     # [T] int32
+    values: jax.Array         # [T, tm, tk]
+    tm: int
+    tk: int
+    grid: Tuple[int, int]     # (Mt, Kt) tile grid of the full matrix
+    shape: Tuple[int, int]    # (m, k) logical shape
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.tile_rows.shape[0])
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of packed-tile area holding logical non-zero blocks."""
+        dense_area = self.num_tiles * self.tm * self.tk
+        return float(self._nnz_area) / dense_area if dense_area else 0.0
+
+    # populated by pack_tiles
+    _nnz_area: int = 0
+
+
+def pack_tiles(bsr: BlockSparseMatrix, tm: int = 128, tk: int = 128) -> TilePacking:
+    """Pack a static BSR matrix into MXU-aligned dense tiles.
+
+    This is the TPU analogue of PopSparse's compile-time value re-ordering:
+    the returned ``values`` tensor is laid out exactly in kernel-visit
+    order, and the index arrays are baked into the grid as scalar-prefetch
+    constants.
+    """
+    if not bsr.is_static:
+        raise ValueError("pack_tiles requires a static (host-indexed) pattern")
+    m, k = bsr.shape
+    b = bsr.block_size
+    if tm % b or tk % b:
+        raise ValueError(f"tile ({tm},{tk}) not divisible by block {b}")
+    mt, kt = -(-m // tm), -(-k // tk)
+    rpb, cpb = tm // b, tk // b  # logical blocks per tile, each dim
+
+    rows = np.asarray(bsr.row_idx)
+    cols = np.asarray(bsr.col_idx)
+    t_r, t_c = rows // rpb, cols // cpb
+    lin = t_r * kt + t_c
+    uniq = np.unique(lin)
+    # coverage: every row-tile must appear at least once
+    present_rows = set((uniq // kt).tolist())
+    pad = np.asarray([r * kt for r in range(mt) if r not in present_rows],
+                     dtype=uniq.dtype)
+    uniq = np.sort(np.concatenate([uniq, pad]))
+    slot_of = {int(v): i for i, v in enumerate(uniq)}
+    T = len(uniq)
+
+    tile_rows = (uniq // kt).astype(np.int32)
+    tile_cols = (uniq % kt).astype(np.int32)
+
+    # scatter logical blocks into the tile stack (one-time relayout)
+    slots = np.asarray([slot_of[int(v)] for v in lin], np.int64)
+    in_r = (rows % rpb).astype(np.int64)
+    in_c = (cols % cpb).astype(np.int64)
+    vals = jnp.asarray(bsr.values)
+    tiles = jnp.zeros((T, rpb, b, cpb, b), vals.dtype)
+    tiles = tiles.at[jnp.asarray(slots), jnp.asarray(in_r), :,
+                     jnp.asarray(in_c), :].add(vals)
+    tiles = tiles.reshape(T, tm, tk)
+
+    packing = TilePacking(tile_rows, tile_cols, tiles, tm, tk,
+                          (mt, kt), (m, k))
+    object.__setattr__(packing, "_nnz_area", int(bsr.nnz_blocks) * b * b)
+    return packing
+
+
+def balanced_k_splits(block_mask: np.ndarray, q: int) -> np.ndarray:
+    """Choose ``q`` *uneven* split positions over block-columns balancing nnz.
+
+    Returns boundaries ``[q+1]`` over the block-column index (``k`` dim),
+    with ``boundaries[0]=0`` and ``boundaries[q]=Kb``.  Faithful to paper
+    Fig. 1a: split positions adapt to the known pattern.
+    """
+    col_nnz = np.asarray(block_mask, bool).sum(axis=0)
+    kb = len(col_nnz)
+    if q > kb:
+        raise ValueError(f"q={q} partitions > {kb} block columns")
+    total = int(col_nnz.sum())
+    prefix = np.concatenate([[0], np.cumsum(col_nnz)])
+    # target nnz per partition; walk boundaries greedily on the prefix sum
+    boundaries = [0]
+    for p in range(1, q):
+        target = total * p / q
+        # smallest boundary with prefix >= target, but leave room for the
+        # remaining partitions (each needs >= 1 column)
+        j = int(np.searchsorted(prefix, target, side="left"))
+        j = max(j, boundaries[-1] + 1)
+        j = min(j, kb - (q - p))
+        boundaries.append(j)
+    boundaries.append(kb)
+    return np.asarray(boundaries, np.int64)
+
+
+def even_k_splits(kb: int, q: int) -> np.ndarray:
+    """Dynamic-mode fixed equal splits (paper §3.3): last may be smaller."""
+    size = -(-kb // q)
+    return np.minimum(np.arange(q + 1) * size, kb).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBlocks:
+    """Per-mesh-shard stacked block arrays for TP SpMM via shard_map.
+
+    Arrays are stacked on a leading ``q`` axis (to be sharded over the
+    ``model`` mesh axis) and padded to a common ``slots`` length with
+    zero-valued blocks at (row 0, col boundaries[i]) so padded slots
+    contribute exactly zero.
+    """
+
+    values: jax.Array    # [q, slots, b, b]
+    row_idx: jax.Array   # [q, slots] int32
+    col_idx: jax.Array   # [q, slots] int32 (GLOBAL block-col index)
+    boundaries: np.ndarray
+    shape: Tuple[int, int]
+    block_size: int
+    real_counts: np.ndarray  # [q] nnz blocks actually owned per shard
+
+    @property
+    def q(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def slots(self) -> int:
+        return int(self.values.shape[1])
+
+
+def shard_blocks_by_k(bsr: BlockSparseMatrix, q: int,
+                      *, balanced: bool = True) -> ShardedBlocks:
+    """Distribute blocks over ``q`` k-partitions (static partitioner output).
+
+    ``balanced=True`` uses nnz-balanced uneven splits (static mode);
+    ``balanced=False`` uses fixed equal splits (dynamic mode) -- useful to
+    measure the imbalance cost the paper attributes to dynamic sparsity.
+    """
+    if not bsr.is_static:
+        raise ValueError("shard_blocks_by_k requires static pattern")
+    mask = bsr.block_mask()
+    mb, kb = mask.shape
+    bounds = (balanced_k_splits(mask, q) if balanced else even_k_splits(kb, q))
+    rows = np.asarray(bsr.row_idx)
+    cols = np.asarray(bsr.col_idx)
+    owner = np.searchsorted(bounds, cols, side="right") - 1
+    counts = np.bincount(owner, minlength=q)
+    slots = int(counts.max()) if len(counts) else 1
+    slots = max(slots, 1)
+
+    b = bsr.block_size
+    val_out = jnp.zeros((q, slots, b, b), bsr.values.dtype)
+    row_out = np.zeros((q, slots), np.int32)
+    col_out = np.zeros((q, slots), np.int32)
+    for s in range(q):
+        col_out[s, :] = bounds[s]  # padding points at an owned column
+    fill = np.zeros(q, np.int64)
+    src_order = np.argsort(owner, kind="stable")
+    dst_q = owner[src_order]
+    dst_slot = np.empty_like(dst_q)
+    for i, qq in enumerate(dst_q):
+        dst_slot[i] = fill[qq]
+        fill[qq] += 1
+    row_out[dst_q, dst_slot] = rows[src_order]
+    col_out[dst_q, dst_slot] = cols[src_order]
+    val_out = val_out.at[jnp.asarray(dst_q), jnp.asarray(dst_slot)].set(
+        jnp.asarray(bsr.values)[jnp.asarray(src_order)])
+    return ShardedBlocks(val_out, jnp.asarray(row_out), jnp.asarray(col_out),
+                         bounds, bsr.shape, b, counts)
+
+
+def balance_report(counts: np.ndarray) -> dict:
+    """Load-balance diagnostics (used by tests + benchmarks)."""
+    counts = np.asarray(counts)
+    mx, mn, mean = counts.max(), counts.min(), counts.mean()
+    return {
+        "max": int(mx), "min": int(mn), "mean": float(mean),
+        "imbalance": float(mx / mean) if mean else 0.0,
+        "padding_waste": float((mx * len(counts) - counts.sum())
+                               / max(1, counts.sum())),
+    }

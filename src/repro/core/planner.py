@@ -1,0 +1,112 @@
+"""Dynamic-sparsity planner (PopSparse §3.3, Appendix A.2).
+
+With dynamic sparsity only ``d_max`` is known at compile time.  The paper's
+planner chooses how many **equal** parts to divide each of (m, k, n) into
+(``q^m, q^k, q^n``), each partition mapping to one compute unit, and sizes
+fixed *buckets* for metaInfo + non-zero values:
+
+    N_nonzero = m * k * d_max / (q^m * q^k)        (+ headroom)
+
+On TPU the "compute units" are (a) grid steps of the dsmm Pallas kernel on
+one chip and (b) chips on the ``model`` mesh axis.  The planner here keeps
+the paper's structure -- an analytic cost model over (q^m, q^k, q^n)
+triples, evaluated at compile time -- with TPU constants (MXU rate, HBM
+and ICI bandwidth) instead of IPU tile/exchange cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+# TPU v5e single-chip constants (see system brief)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HEADROOM = 1.25  # paper: "some extra headroom is given in the size of these buckets"
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicPlan:
+    q_m: int
+    q_k: int
+    q_n: int
+    bucket_blocks: int     # non-zero-block capacity per (q_m x q_k) bucket
+    nnz_max_blocks: int    # total block slots across buckets (>= true nnz)
+    est_seconds: float
+    shape: Tuple[int, int, int]   # (m, k, n)
+    block_size: int
+    d_max: float
+
+    @property
+    def total_partitions(self) -> int:
+        return self.q_m * self.q_k * self.q_n
+
+
+def _divisor_candidates(dim_blocks: int, limit: int) -> list[int]:
+    cands = set()
+    q = 1
+    while q <= min(dim_blocks, limit):
+        cands.add(q)
+        q *= 2
+    for q in range(1, min(dim_blocks, limit) + 1):
+        if dim_blocks % q == 0:
+            cands.add(q)
+    return sorted(cands)
+
+
+def _cost(m: int, k: int, n: int, d_max: float, b: int,
+          q_m: int, q_k: int, q_n: int, bytes_per_el: int,
+          units: int) -> float:
+    """Estimated step time for one unit, paper-style phase decomposition."""
+    parts_mk = q_m * q_k
+    bucket_blocks = math.ceil(m * k * d_max / (b * b) / parts_mk * HEADROOM)
+    # compute: bucket FLOPs on this unit's n-slice
+    flops = 2.0 * bucket_blocks * b * b * (n / q_n)
+    t_compute = flops / PEAK_FLOPS_BF16
+    # distribution phase: move dense input slice + bucket into local memory
+    in_bytes = (k / q_k) * (n / q_n) * bytes_per_el
+    bucket_bytes = bucket_blocks * b * b * bytes_per_el + bucket_blocks * 8
+    t_dist = (in_bytes + bucket_bytes) / HBM_BW
+    # reduction across q_k partial outputs (log-tree on ICI when sharded)
+    out_bytes = (m / q_m) * (n / q_n) * bytes_per_el
+    t_reduce = out_bytes * max(0, q_k - 1) / max(q_k, 1) / ICI_BW
+    # propagation headroom: imbalance risk grows with parts_mk (paper worst
+    # case needs up to q_m*q_k extra exchange+compute steps); model the
+    # expected overhead as a mild superlinear penalty.
+    t_prop = t_compute * 0.1 * math.log2(max(2, parts_mk))
+    return t_compute + t_dist + t_reduce + t_prop
+
+
+def plan_dynamic(m: int, k: int, n: int, *, d_max: float, block_size: int,
+                 units: int = 16, bytes_per_el: int = 2) -> DynamicPlan:
+    """Pick (q^m, q^k, q^n) minimizing the analytic cost model.
+
+    ``units`` is the parallel-unit budget (q^m*q^k*q^n <= units), e.g. the
+    ``model`` mesh-axis size for a TP deployment or a per-chip grid budget.
+    """
+    b = block_size
+    mb, kb, nb = m // b, k // b, max(1, n // b)
+    best = None
+    for q_m in _divisor_candidates(mb, units):
+        for q_k in _divisor_candidates(kb, units // q_m):
+            rem = units // (q_m * q_k)
+            if rem < 1:
+                continue
+            for q_n in _divisor_candidates(nb, rem):
+                c = _cost(m, k, n, d_max, b, q_m, q_k, q_n,
+                          bytes_per_el, units)
+                if best is None or c < best[0]:
+                    best = (c, q_m, q_k, q_n)
+    assert best is not None
+    c, q_m, q_k, q_n = best
+    parts_mk = q_m * q_k
+    bucket = math.ceil(m * k * d_max / (b * b) / parts_mk * HEADROOM)
+    return DynamicPlan(q_m, q_k, q_n, bucket, bucket * parts_mk, c,
+                       (m, k, n), b, d_max)
+
+
+def nnz_max_blocks(m: int, k: int, block_size: int, d_max: float) -> int:
+    """Total block-slot budget implied by ``d_max`` (no partitioning)."""
+    grid = (m // block_size) * (k // block_size)
+    return max(1, math.ceil(grid * d_max))

@@ -1,0 +1,84 @@
+"""Block pruning + dynamic sparse training utilities.
+
+The paper's closing discussion (§6) calls for "effective block sparse
+pruning algorithms"; this module supplies the two standard families so the
+framework's sparse configs are trainable end-to-end:
+
+* **one-shot magnitude block pruning** (Zhu & Gupta 2017 lifted to blocks)
+  -- produces *static* patterns for ``SparseLinear``;
+* **RigL-style block prune/regrow** (Evci et al. 2019, block granularity)
+  -- drives the *dynamic* mode: the mask is runtime data, capacity is
+  bounded by ``d_max`` exactly as dynamic PopSparse requires.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+
+
+def magnitude_block_prune(dense_w: np.ndarray, block_size: int,
+                          density: float) -> np.ndarray:
+    """One-shot static pattern: keep top-|density| blocks by L1 norm."""
+    return masks_lib.magnitude_block_mask(np.asarray(dense_w), block_size,
+                                          density)
+
+
+def _block_scores(x: jax.Array, b: int) -> jax.Array:
+    m, k = x.shape
+    return jnp.abs(x).reshape(m // b, b, k // b, b).sum(axis=(1, 3))
+
+
+def rigl_update(w: jax.Array, grad: jax.Array, mask: jax.Array, *,
+                block_size: int, fraction: float,
+                rng: jax.Array) -> jax.Array:
+    """One RigL block-sparse topology update (jit-compatible).
+
+    Drop the ``fraction`` lowest-|W| active blocks, regrow the same number
+    of inactive blocks with the largest |grad| -- total active count (and
+    therefore ``d_max`` capacity) is preserved, so the dynamic-sparse
+    compiled program never changes shape.
+    """
+    b = block_size
+    w_score = _block_scores(w, b)
+    g_score = _block_scores(grad, b)
+    active = mask.astype(bool)
+    n_active = jnp.sum(active.astype(jnp.int32))
+    n_move = jnp.maximum(
+        (n_active.astype(jnp.float32) * fraction).astype(jnp.int32), 0)
+
+    flat_active = active.reshape(-1)
+    # drop: lowest |W| among active
+    drop_key = jnp.where(flat_active, w_score.reshape(-1), jnp.inf)
+    drop_order = jnp.argsort(drop_key)
+    drop_rank = jnp.argsort(drop_order)           # rank of each block
+    dropped = flat_active & (drop_rank < n_move)
+    # grow: highest |grad| among inactive
+    grow_key = jnp.where(~flat_active, g_score.reshape(-1), -jnp.inf)
+    grow_order = jnp.argsort(-grow_key)
+    grow_rank = jnp.argsort(grow_order)
+    grown = (~flat_active) & (grow_rank < n_move)
+
+    new_mask = (flat_active & ~dropped) | grown
+    return new_mask.reshape(mask.shape)
+
+
+def apply_block_mask(w: jax.Array, mask: jax.Array, block_size: int) -> jax.Array:
+    """Zero out masked-away blocks of a dense master weight."""
+    m, k = w.shape
+    b = block_size
+    mk = jnp.repeat(jnp.repeat(mask.astype(w.dtype), b, axis=0), b, axis=1)
+    return w * mk
+
+
+def density_schedule(step: int, *, start_step: int, end_step: int,
+                     initial: float, final: float) -> float:
+    """Cubic density decay (Zhu & Gupta 2017) for gradual block pruning."""
+    if step <= start_step:
+        return initial
+    if step >= end_step:
+        return final
+    t = (step - start_step) / max(1, end_step - start_step)
+    return final + (initial - final) * (1 - t) ** 3

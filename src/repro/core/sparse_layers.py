@@ -1,0 +1,202 @@
+"""Neural-network layers backed by PopSparse-style block-sparse matmul.
+
+The framework uses a light functional module convention throughout:
+each layer is a small class holding *static* configuration (shapes,
+patterns -- compile-time data, exactly what PopSparse fixes at graph
+construction) with two methods:
+
+    init(key)            -> params pytree (trainable leaves only)
+    apply(params, x, ..) -> output
+
+Static patterns (np index arrays) live on the layer object, NOT in the
+params pytree, so they are trace-time constants -- the compile-time
+contract of static sparsity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic_sparse as dsp
+from repro.core import masks as masks_lib
+from repro.core import static_sparse as ssp
+from repro.core.bsr import BlockSparseMatrix
+
+
+def _fan_in_init(key, nnz, b, fan_in, dtype):
+    scale = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, (nnz, b, b)) * scale).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinear:
+    """y = x @ (M ⊙ W)^T (+ bias) with static block pattern M.
+
+    ``pattern`` is a host block mask ``[out/b, in/b]``; effective density
+    after masking is the paper's ``d``.
+    """
+
+    in_features: int
+    out_features: int
+    block_size: int
+    pattern: np.ndarray                 # [out/b, in/b] bool (host)
+    use_bias: bool = False
+    dtype: object = jnp.float32
+    backend: str = "xla"
+
+    def __post_init__(self):
+        ob, ib = self.out_features // self.block_size, \
+            self.in_features // self.block_size
+        if self.pattern.shape != (ob, ib):
+            raise ValueError(
+                f"pattern {self.pattern.shape} != grid {(ob, ib)}")
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(self.pattern.sum())
+
+    @property
+    def density(self) -> float:
+        return self.nnz_blocks / self.pattern.size
+
+    def _indices(self):
+        rows, cols = np.nonzero(self.pattern)
+        order = np.lexsort((cols, rows))
+        return rows[order].astype(np.int32), cols[order].astype(np.int32)
+
+    def init(self, key) -> dict:
+        # fan-in of a sparse layer: expected nnz inputs per output row
+        fan_in = self.in_features * self.density
+        params = {"values": _fan_in_init(key, self.nnz_blocks,
+                                         self.block_size, fan_in, self.dtype)}
+        if self.use_bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def as_bsr(self, params) -> BlockSparseMatrix:
+        rows, cols = self._indices()
+        return BlockSparseMatrix(params["values"], rows, cols,
+                                 (self.out_features, self.in_features),
+                                 self.block_size)
+
+    def apply(self, params, x: jax.Array) -> jax.Array:
+        rows, cols = self._indices()
+        grid = (self.out_features // self.block_size,
+                self.in_features // self.block_size)
+        f = ssp.make_spmm(rows, cols, grid, self.block_size)
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, self.in_features).T
+        y = f(params["values"], x2.astype(params["values"].dtype))
+        y = y.T.reshape(*lead, self.out_features)
+        if self.use_bias:
+            y = y + params["bias"]
+        return y
+
+    @classmethod
+    def random_pattern(cls, key_unused, in_features, out_features,
+                       block_size, density, *, seed=0, **kw):
+        pattern = masks_lib.random_block_mask(
+            out_features, in_features, block_size, density, seed=seed)
+        return cls(in_features, out_features, block_size, pattern, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicSparseLinear:
+    """Dense master weight + runtime block mask (dynamic sparse training).
+
+    Matches PopSparse dynamic mode: capacity fixed by ``d_max`` at compile
+    time; the mask is data and may change every step (RigL-style regrowth,
+    see ``pruning.py``).  Params carry the dense master weight and the
+    mask; ``apply`` encodes + multiplies through the dynamic path.
+    """
+
+    in_features: int
+    out_features: int
+    block_size: int
+    d_max: float
+    use_bias: bool = False
+    dtype: object = jnp.float32
+    backend: str = "xla"
+
+    @property
+    def nnz_max(self) -> int:
+        grid = (self.out_features // self.block_size) * \
+            (self.in_features // self.block_size)
+        return max(1, int(np.ceil(grid * self.d_max)))
+
+    def init(self, key) -> dict:
+        kw, km = jax.random.split(key)
+        scale = 1.0 / np.sqrt(self.in_features * self.d_max)
+        w = (jax.random.normal(
+            kw, (self.out_features, self.in_features)) * scale).astype(self.dtype)
+        ob = self.out_features // self.block_size
+        ib = self.in_features // self.block_size
+        mask = masks_lib.random_block_mask(
+            self.out_features, self.in_features, self.block_size,
+            self.d_max, seed=int(jax.random.randint(km, (), 0, 2**31 - 1)))
+        params = {"w": w, "mask": jnp.asarray(mask)}
+        if self.use_bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.dtype)
+        return params
+
+    def apply(self, params, x: jax.Array) -> jax.Array:
+        op = dsp.encode(params["w"], params["mask"],
+                        block_size=self.block_size, nnz_max=self.nnz_max)
+        y = dsp.dspmm_nt(op, x.astype(params["w"].dtype),
+                         backend=self.backend)
+        if self.use_bias:
+            y = y + params["bias"]
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseFFN:
+    """Transformer FFN with block-sparse weights (gated or plain).
+
+    This is the framework's first-class integration of the paper: swap a
+    dense FFN for a sparse one via config (``ffn_density``,
+    ``ffn_block_size``) -- see configs/*.py sparse variants.
+    """
+
+    d_model: int
+    d_ff: int
+    block_size: int
+    density: float
+    gated: bool = True
+    seed: int = 0
+    dtype: object = jnp.float32
+
+    def _layers(self):
+        mk = lambda i, o, s: SparseLinear.random_pattern(
+            None, i, o, self.block_size, self.density, seed=self.seed + s,
+            dtype=self.dtype)
+        up = mk(self.d_model, self.d_ff, 1)
+        down = mk(self.d_ff, self.d_model, 2)
+        gate = mk(self.d_model, self.d_ff, 3) if self.gated else None
+        return up, down, gate
+
+    def init(self, key) -> dict:
+        up, down, gate = self._layers()
+        ks = jax.random.split(key, 3)
+        params = {"up": up.init(ks[0]), "down": down.init(ks[1])}
+        if gate is not None:
+            params["gate"] = gate.init(ks[2])
+        return params
+
+    def apply(self, params, x: jax.Array) -> jax.Array:
+        up, down, gate = self._layers()
+        h = up.apply(params["up"], x)
+        if gate is not None:
+            g = gate.apply(params["gate"], x)
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        return down.apply(params["down"], h)
+
+    def flops_per_token(self) -> float:
+        n_mats = 3 if self.gated else 2
+        return 2.0 * self.d_model * self.d_ff * self.density * n_mats

@@ -1,0 +1,72 @@
+"""Deterministic sharded token pipeline.
+
+Production contract (what matters at pod scale):
+
+* **determinism**: batch content is a pure function of (seed, step,
+  shard) -- restarts reproduce the exact token stream;
+* **sharding**: each data-parallel shard / host reads only its slice;
+* **checkpointable cursor**: the pipeline state is just ``step``; the
+  trainer stores it in the checkpoint and resumes exactly;
+* **elasticity**: because content is derived per (step, global example
+  index), changing the number of shards re-partitions the same stream.
+
+The corpus here is synthetic (structured pseudo-text: a Markov-ish
+integer process so the model has something learnable, unlike uniform
+noise) -- real deployments swap ``_example`` for a tokenized dataset
+reader with the same (seed, index) contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    batch_per_shard: int
+    seq_len: int
+    num_shards: int = 1
+    shard_id: int = 0
+    seed: int = 0
+
+    def _example(self, index: int) -> np.ndarray:
+        """Deterministic pseudo-text: token_{t+1} depends on token_t."""
+        rng = np.random.default_rng((self.seed, index))
+        v = self.vocab_size
+        base = rng.integers(0, v, size=self.seq_len + 1, dtype=np.int64)
+        # second-order structure: with p=0.7 the next token is a fixed
+        # affine function of the previous one (learnable signal)
+        follow = rng.random(self.seq_len + 1) < 0.7
+        out = base.copy()
+        for t in range(1, self.seq_len + 1):
+            if follow[t]:
+                out[t] = (out[t - 1] * 31 + 7) % v
+        return out
+
+    def get_batch(self, step: int) -> dict:
+        """Returns {"tokens": [B, S], "targets": [B, S]} for this shard."""
+        gb = self.batch_per_shard * self.num_shards
+        idx0 = step * gb + self.shard_id * self.batch_per_shard
+        ex = np.stack([self._example(idx0 + i)
+                       for i in range(self.batch_per_shard)])
+        return {"tokens": ex[:, :-1].astype(np.int32),
+                "targets": ex[:, 1:].astype(np.int32)}
+
+    # -- checkpoint contract -------------------------------------------------
+    def state(self, step: int) -> dict:
+        return {"step": step, "seed": self.seed,
+                "num_shards": self.num_shards}
+
+    @staticmethod
+    def resume_step(state: dict) -> int:
+        return int(state["step"])
+
+
+def make_lm_batch(key, vocab: int, batch: int, seq: int):
+    """Quick random batch for tests/examples (jax-side)."""
+    import jax
+    tokens = jax.random.randint(key, (batch, seq + 1), 0, vocab)
+    return {"tokens": tokens[:, :-1].astype("int32"),
+            "targets": tokens[:, 1:].astype("int32")}

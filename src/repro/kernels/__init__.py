@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper), ``ref.py`` (pure-jnp oracle).  Validated on CPU with
+``interpret=True``; compiled path targets TPU v5e.
+
+* ``bsmm``     static block-sparse matmul (paper §3.2)
+* ``dsmm``     dynamic block-sparse matmul (paper §3.3)
+* ``gmm``      grouped GEMM = dynamic block-diagonal (MoE / MegaBlocks)
+* ``dense_mm`` dense tiled baseline (poplin::matMul analogue)
+* ``bs_attn``  block-sparse flash attention (static mask, long-context)
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.bs_attn.ops import bs_attn, mask_to_pairs  # noqa: F401
+from repro.kernels.bs_attn.ref import bs_attn_ref  # noqa: F401

@@ -1,0 +1,38 @@
+"""Jit'd wrapper for block-sparse attention: mask -> visit pairs."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.bs_attn.bs_attn import bs_attn_call
+
+
+def mask_to_pairs(block_mask: np.ndarray):
+    """Host: flatten a block mask into row-sorted (q_tile, kv_tile) pairs.
+
+    Raises if any q tile row is empty (an uncovered output tile would
+    never be written) -- causal masks including the diagonal always pass.
+    """
+    mask = np.asarray(block_mask, bool)
+    if not mask.any(axis=1).all():
+        raise ValueError("every q block-row needs >=1 visible kv block")
+    rows, cols = np.nonzero(mask)
+    order = np.lexsort((cols, rows))
+    return rows[order].astype(np.int32), cols[order].astype(np.int32)
+
+
+def bs_attn(q, k, v, block_mask: np.ndarray, *, bq: int = 128,
+            bkv: int = 128, scale: float | None = None, causal: bool = True,
+            softcap: float | None = None, interpret: bool = False):
+    """Block-sparse attention.  ``q: [H, Sq, dh]``, ``k/v: [H, Skv, dh]``,
+    ``block_mask: [Sq/bq, Skv/bkv]`` host bool."""
+    h, sq, dh = q.shape
+    skv = k.shape[1]
+    if block_mask.shape != (sq // bq, skv // bkv):
+        raise ValueError(f"mask {block_mask.shape} != grid "
+                         f"{(sq // bq, skv // bkv)}")
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    rows, cols = mask_to_pairs(block_mask)
+    return bs_attn_call(jnp.asarray(rows), jnp.asarray(cols), q, k, v,
+                        bq=bq, bkv=bkv, scale=float(scale), causal=causal,
+                        softcap=softcap, interpret=interpret)

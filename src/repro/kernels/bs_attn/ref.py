@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for block-sparse attention (dense softmax + mask)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def bs_attn_ref(q, k, v, block_mask: np.ndarray, *, bq: int = 128,
+                bkv: int = 128, scale: float | None = None,
+                causal: bool = True, softcap: float | None = None):
+    h, sq, dh = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    el_mask = np.repeat(np.repeat(np.asarray(block_mask, bool), bq, axis=0),
+                        bkv, axis=1)
+    if causal:
+        el_mask = el_mask & (np.arange(sq)[:, None] >= np.arange(skv)[None, :])
+    logits = jnp.where(jnp.asarray(el_mask)[None], logits, -1e30)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

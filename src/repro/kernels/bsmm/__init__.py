@@ -1,0 +1,2 @@
+from repro.kernels.bsmm.ops import bsmm, bsmm_packed  # noqa: F401
+from repro.kernels.bsmm.ref import bsmm_ref  # noqa: F401

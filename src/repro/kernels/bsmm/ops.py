@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the static block-sparse matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsr import BlockSparseMatrix
+from repro.core.partitioner import TilePacking, pack_tiles
+from repro.kernels.bsmm.bsmm import bsmm_call
+
+
+def _pick_tiles(m: int, k: int, n: int, b: int):
+    """MXU-aligned tile sizes, shrunk for small problems."""
+    tm = min(128, m) if m % 128 else 128
+    tk = min(128, k) if k % 128 else 128
+    tn = min(128, n) if n % 128 else 128
+    # keep divisibility with the logical block
+    tm = max(b, tm - tm % b)
+    tk = max(b, tk - tk % b)
+    while m % tm:
+        tm //= 2
+    while k % tk:
+        tk //= 2
+    while n % tn:
+        tn //= 2
+    return max(tm, 1), max(tk, 1), max(tn, 1)
+
+
+def bsmm_packed(packing: TilePacking, x, *, tn: int | None = None,
+                interpret: bool = False):
+    """SpMM from a pre-packed tile set (production path: pack once at
+    weight-load, multiply every step)."""
+    m, k = packing.shape
+    n = x.shape[-1]
+    tn = tn or _pick_tiles(m, k, n, packing.tk)[2]
+    return bsmm_call(jnp.asarray(packing.tile_rows),
+                     jnp.asarray(packing.tile_cols),
+                     packing.values, x,
+                     tm=packing.tm, tk=packing.tk, tn=tn,
+                     grid_m=packing.grid[0], interpret=interpret)
+
+
+def bsmm(bsr: BlockSparseMatrix, x, *, tm: int | None = None,
+         tk: int | None = None, tn: int | None = None,
+         interpret: bool = False):
+    """One-shot convenience: pack + multiply.  ``x: [k, n]``."""
+    if not bsr.is_static:
+        raise ValueError("bsmm requires a static pattern (use dsmm)")
+    m, k = bsr.shape
+    n = x.shape[-1]
+    atm, atk, atn = _pick_tiles(m, k, n, bsr.block_size)
+    packing = pack_tiles(bsr, tm or atm, tk or atk)
+    return bsmm_packed(packing, x, tn=tn or atn, interpret=interpret)

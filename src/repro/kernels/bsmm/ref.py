@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for bsmm: densify then matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bsr import BlockSparseMatrix
+
+
+def bsmm_ref(bsr: BlockSparseMatrix, x):
+    """Reference ``Y = (M ⊙ W) @ X`` -- maximally simple, O(m·k·n)."""
+    return jnp.dot(bsr.to_dense(), x, preferred_element_type=jnp.float32
+                   ).astype(x.dtype)

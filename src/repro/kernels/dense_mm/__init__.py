@@ -1,0 +1,2 @@
+from repro.kernels.dense_mm.ops import dense_mm  # noqa: F401
+from repro.kernels.dense_mm.ref import dense_mm_ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the dense matmul baseline kernel."""
+from __future__ import annotations
+
+from repro.kernels.dense_mm.dense_mm import dense_mm_call
+
+
+def _fit(dim, pref=128):
+    v = pref
+    while dim % v:
+        v //= 2
+    return max(v, 1)
+
+
+def dense_mm(a, b, *, tm=None, tk=None, tn=None, interpret: bool = False):
+    m, k = a.shape
+    _, n = b.shape
+    return dense_mm_call(a, b, tm=tm or _fit(m), tk=tk or _fit(k),
+                         tn=tn or _fit(n), interpret=interpret)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for dense_mm."""
+import jax.numpy as jnp
+
+
+def dense_mm_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.dsmm.ops import dsmm  # noqa: F401
+from repro.kernels.dsmm.ref import dsmm_ref  # noqa: F401

@@ -1,0 +1,43 @@
+"""Jit'd wrapper + runtime slot encoder for the dynamic sparse kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dynamic_sparse import DynamicOperand
+from repro.kernels.dsmm.dsmm import dsmm_call
+
+
+def _encode_slots(op: DynamicOperand):
+    """Runtime re-partitioning (the paper's dynamic distribution phase):
+
+    1. prepend one zero 'coverage' slot per output block-row so every
+       output tile is written even if a row has no non-zeros this step;
+    2. stable-sort all slots by row so the kernel's accumulate/flush walk
+       is valid for *any* runtime pattern.
+    """
+    mb, _ = op.grid
+    b = op.block_size
+    cov_rows = jnp.arange(mb, dtype=jnp.int32)
+    rows = jnp.concatenate([cov_rows, op.row_idx])
+    cols = jnp.concatenate([jnp.zeros((mb,), jnp.int32), op.col_idx])
+    vals = jnp.concatenate(
+        [jnp.zeros((mb, b, b), op.values.dtype), op.values])
+    order = jnp.argsort(rows, stable=True)
+    return rows[order], cols[order], vals[order]
+
+
+def dsmm(op: DynamicOperand, x, *, tn: int | None = None,
+         interpret: bool = False):
+    """Dynamic SpMM ``Y = decode(op) @ X`` through the Pallas kernel."""
+    m, k = op.shape
+    b = op.block_size
+    n = x.shape[-1]
+    if tn is None:
+        tn = 128
+        while n % tn:
+            tn //= 2
+        tn = max(tn, 1)
+    rows, cols, vals = _encode_slots(op)
+    return dsmm_call(rows, cols, vals, x, b=b, tn=tn, grid_m=m // b,
+                     interpret=interpret)

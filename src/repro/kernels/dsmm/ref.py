@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for dsmm: decode to dense then matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dynamic_sparse import DynamicOperand
+
+
+def dsmm_ref(op: DynamicOperand, x):
+    return jnp.dot(op.to_dense(), x,
+                   preferred_element_type=jnp.float32).astype(x.dtype)

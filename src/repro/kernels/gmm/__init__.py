@@ -1,0 +1,2 @@
+from repro.kernels.gmm.ops import gmm  # noqa: F401
+from repro.kernels.gmm.ref import gmm_ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""Jit'd wrapper for the grouped matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gmm.gmm import gmm_call
+
+
+def _fit(t, pref):
+    v = pref
+    while t % v:
+        v //= 2
+    return max(v, 1)
+
+
+def gmm(x, w, expert_ids, *, tm: int | None = None, tf: int | None = None,
+        td: int | None = None, interpret: bool = False):
+    """Grouped GEMM.  ``x: [T, D]`` grouped rows, ``w: [E, D, F]``,
+    ``expert_ids: [T // tm]`` one expert per row tile."""
+    t_rows, d = x.shape
+    e, _, f = w.shape
+    tm = tm or (t_rows // expert_ids.shape[0])
+    tf = tf or _fit(f, 128)
+    td = td or _fit(d, 128)
+    if t_rows % tm:
+        raise ValueError(f"rows {t_rows} not divisible by tile {tm}")
+    if expert_ids.shape[0] != t_rows // tm:
+        raise ValueError("expert_ids must have one entry per row tile")
+    return gmm_call(expert_ids.astype(jnp.int32), x, w, tm=tm, tf=tf,
+                    td=td, interpret=interpret)

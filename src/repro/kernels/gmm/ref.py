@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for gmm: per-row gather of expert weights."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w, expert_ids, *, tm: int):
+    """out[t] = x[t] @ w[expert_of_row(t)] computed row-by-row."""
+    t_rows = x.shape[0]
+    per_row = jnp.repeat(expert_ids, tm, total_repeat_length=t_rows)
+    wg = jnp.take(w, per_row, axis=0)            # [T, D, F]
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      wg.astype(jnp.float32)).astype(x.dtype)

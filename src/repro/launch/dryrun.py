@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, prove memory fits, and extract roofline
+terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell this script:
+  1. builds the full-size config and ShapeDtypeStruct inputs (no data),
+  2. jits the entry point (train_step / prefill / serve_step) with the
+     sharding rules of ``sharding/rules.py``,
+  3. ``.lower().compile()`` -- any sharding mismatch / OOM / unsupported
+     collective fails here, which is the point,
+  4. prints ``compiled.memory_analysis()`` and ``cost_analysis()``,
+  5. runs the loop-aware HLO analyzer (``analysis/hlo_cost``) on the
+     per-device module and writes a JSON record under
+     ``experiments/dryrun/``.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.analysis.hlo_cost import analyze_hlo_text
+from repro.analysis.roofline import (V5E, model_flops_forward,
+                                     model_flops_train, roofline_terms)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.sharding import rules
+from repro.train.step import TrainHParams, init_train_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(name: str, shape: str, mesh, *, cfg=None,
+               hp: TrainHParams = TrainHParams()):
+    """Returns (fn, in_args_sds, in_shardings, out_shardings, meta)."""
+    cfg = cfg or configs.get(name)
+    lm = LM(cfg)
+    kind, kw = configs.input_specs(name, shape, cfg=cfg)
+    sh = configs.SHAPES[shape]
+    meta = dict(arch=cfg.name, shape=shape, kind=kind,
+                batch=sh["batch"], seq=sh["seq"])
+
+    if kind == "train":
+        train_step = make_train_step(lm, hp)
+        state_sds = jax.eval_shape(
+            lambda: init_train_state(lm, jax.random.PRNGKey(0), hp=hp))
+        batch_sds = kw["batch"]
+        state_specs = rules.train_state_specs(state_sds, mesh)
+        batch_specs = rules.train_batch_specs(batch_sds, mesh)
+        out_sds = jax.eval_shape(train_step, state_sds, batch_sds)
+        metric_specs = jax.tree.map(lambda _: P(), out_sds[1])
+        in_sh = (_shardings(state_specs, mesh), _shardings(batch_specs, mesh))
+        out_sh = (_shardings(state_specs, mesh),
+                  _shardings(metric_specs, mesh))
+        tokens = sh["batch"] * sh["seq"]
+        meta["model_flops_device"] = model_flops_train(
+            cfg.active_param_count(), tokens) / mesh.size
+        return train_step, (state_sds, batch_sds), in_sh, out_sh, meta
+
+    params_sds = configs.param_specs(name, cfg=cfg)
+    p_specs = rules.param_specs(params_sds, mesh)
+
+    if kind == "prefill":
+        extras = {k: v for k, v in kw.items() if k != "tokens"}
+
+        def prefill_fn(params, tokens, extras):
+            return lm.prefill(params, tokens,
+                              max_len=kw["tokens"].shape[1] +
+                              (cfg.frontend_len if cfg.frontend == "vision"
+                               else 0),
+                              **extras)
+
+        b_specs = rules.train_batch_specs(
+            {"tokens": kw["tokens"], **extras}, mesh)
+        caches_sds = jax.eval_shape(prefill_fn, params_sds, kw["tokens"],
+                                    extras)[1]
+        c_specs = rules.cache_specs(caches_sds, mesh, batch=sh["batch"])
+        ba = rules.batch_axes(mesh)
+        logit_spec = P(ba if len(ba) > 1 else (ba[0] if ba else None),
+                       "model" if cfg.vocab_size % mesh.shape["model"] == 0
+                       else None)
+        in_sh = (_shardings(p_specs, mesh),
+                 _shardings(b_specs["tokens"], mesh),
+                 _shardings({k: b_specs[k] for k in extras}, mesh))
+        out_sh = (NamedSharding(mesh, logit_spec), _shardings(c_specs, mesh))
+        tokens = sh["batch"] * sh["seq"]
+        meta["model_flops_device"] = model_flops_forward(
+            cfg.active_param_count(), tokens) / mesh.size
+        return (prefill_fn, (params_sds, kw["tokens"], extras), in_sh,
+                out_sh, meta)
+
+    # decode
+    retained = kw["retained"]
+
+    def serve_step(params, tokens, caches, positions):
+        return lm.decode_step(params, tokens, caches, positions,
+                              retained=retained)
+
+    c_specs = rules.cache_specs(kw["caches"], mesh, batch=sh["batch"])
+    ba = rules.batch_axes(mesh)
+    bspec = ba if sh["batch"] % mesh.size // mesh.shape["model"] == 0 else ()
+    b_fit = (sh["batch"] % (mesh.size // mesh.shape["model"])) == 0
+    bfirst = (ba if len(ba) > 1 else ba[0]) if (ba and b_fit) else None
+    tok_spec = P(bfirst, None)
+    pos_spec = P(bfirst)
+    logit_spec = P(bfirst,
+                   "model" if cfg.vocab_size % mesh.shape["model"] == 0
+                   else None)
+    in_sh = (_shardings(p_specs, mesh), NamedSharding(mesh, tok_spec),
+             _shardings(c_specs, mesh), NamedSharding(mesh, pos_spec))
+    out_sh = (NamedSharding(mesh, logit_spec), _shardings(c_specs, mesh))
+    meta["model_flops_device"] = model_flops_forward(
+        cfg.active_param_count(), sh["batch"]) / mesh.size
+    meta["retained"] = retained
+    return (serve_step,
+            (params_sds, kw["tokens"], kw["caches"], kw["positions"]),
+            in_sh, out_sh, meta)
+
+
+def run_cell(name: str, shape: str, *, multi_pod: bool, cfg=None,
+             save: bool = True, verbose: bool = True,
+             hp: TrainHParams = TrainHParams(), tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    fn, args, in_sh, out_sh, meta = build_cell(name, shape, mesh, cfg=cfg,
+                                               hp=hp)
+    with mesh, rules.activation_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+    cost = analyze_hlo_text(compiled.as_text())
+    roof = roofline_terms(cost, V5E,
+                          model_flops_per_device=meta["model_flops_device"])
+    rec = dict(meta, mesh=mesh_name, devices=mesh.size,
+               lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+               memory=dict(
+                   argument_mb=mem.argument_size_in_bytes / 2**20,
+                   output_mb=mem.output_size_in_bytes / 2**20,
+                   temp_mb=mem.temp_size_in_bytes / 2**20,
+                   code_mb=mem.generated_code_size_in_bytes / 2**20),
+               xla_cost=dict(flops=ca.get("flops", 0.0),
+                             bytes=ca.get("bytes accessed", 0.0)),
+               hlo_cost=dict(flops=cost["flops"], bytes=cost["bytes"],
+                             collective_bytes=cost["collective_bytes"],
+                             collectives=cost["collectives"],
+                             warnings=cost["warnings"][:5]),
+               roofline=roof)
+    if verbose:
+        print(f"== {meta['arch']} x {shape} on {mesh_name} "
+              f"({mesh.size} devices) ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory/device: args {rec['memory']['argument_mb']:.0f} MB"
+              f"  temp {rec['memory']['temp_mb']:.0f} MB"
+              f"  output {rec['memory']['output_mb']:.0f} MB")
+        print(f"  per-device: {cost['flops']:.3e} FLOP, "
+              f"{cost['bytes']:.3e} B HBM, "
+              f"{cost['collective_bytes']:.3e} B collective")
+        print(f"  roofline: compute {roof['t_compute']*1e3:.2f} ms | "
+              f"memory {roof['t_memory']*1e3:.2f} ms | "
+              f"collective {roof['t_collective']*1e3:.2f} ms "
+              f"-> {roof['dominant']}-bound"
+              + (f", roofline frac {roof.get('roofline_frac', 0):.3f}"
+                 if "roofline_frac" in roof else ""))
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        mod = configs.ALIASES.get(name, name)
+        fname = f"{mod}__{shape}__{mesh_name}{tag}.json"
+        with open(os.path.join(OUT_DIR, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(configs.SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, tag=args.tag)
+                except Exception as e:  # noqa: BLE001 -- report, keep going
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"!! FAIL {arch} x {shape} multi_pod={mp}: {e}")
+                    traceback.print_exc(limit=3)
+    print(f"\n{'='*60}\ncells: {len(archs)*len(shapes)*len(meshes)}, "
+          f"failures: {len(failures)}")
+    for f in failures:
+        print("  FAIL:", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

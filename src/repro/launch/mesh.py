@@ -1,0 +1,19 @@
+"""Production mesh factories.
+
+A FUNCTION, not a module constant, so importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh (CPU tests / examples): axes exist, size 1."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,96 @@
+"""Base layers: norms, dense projections, embeddings, rotary, MLP.
+
+Functional convention: ``init(key, ...) -> params dict``;
+``apply(params, x, ...) -> y``.  Static structure lives in closures /
+dataclass configs, trainable leaves in the params pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _norm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x, *, eps: float = 1e-6, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"] + 1.0 if plus_one else params["scale"]
+    return (y * scale).astype(x.dtype)
+
+
+def dense_init(key, d_in, d_out, *, bias: bool = False, dtype=jnp.bfloat16,
+               scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def embed_init(key, vocab, d, *, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, *, softcap: float | None = None):
+    logits = x @ params["table"].T
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# --- rotary ----------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x: [..., S, H, dh] (or [..., H, dh] with scalar positions),
+    positions: [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- FFN (dense path) --------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, *, act: str = "silu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    gated = act in ("silu", "gelu")
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(params, x, *, act: str = "silu"):
+    h = dense(params["up"], x)
+    if "gate" in params:
+        g = dense(params["gate"], x)
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        h = g * h
+    else:
+        h = jax.nn.gelu(h)
+    return dense(params["down"], h)

@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD, state-space duality) mixer -- attention-free archs.
+
+Chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060): the sequence is
+split into chunks of length L; within a chunk the recurrence is expanded
+into a (masked) quadratic form that runs on the MXU, across chunks a
+cheap sequential ``lax.scan`` carries the [H, P, N] state.  Decode is the
+O(1) recurrent update.
+
+The SSD *intra-chunk* computation is itself a block-lower-triangular
+structured matmul; the block-sparse machinery applies only in that
+degenerate (block-diagonal) sense -- recorded as inapplicable for the
+paper's technique in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, dense_init, rms_norm
+
+
+def ssm_init(key, cfg, *, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    g = s.n_groups
+    conv_dim = di + 2 * g * s.d_state
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * g * s.d_state + nh   # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d, in_dim, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim))
+                   * (1.0 / np.sqrt(s.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out_proj": dense_init(ks[2], di, d, dtype=dtype),
+    }
+
+
+def _split_in(proj, cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    g = s.n_groups
+    nh = s.num_heads(cfg.d_model)
+    zs, xs, bs, cs, dts = jnp.split(
+        proj, np.cumsum([di, di, g * s.d_state, g * s.d_state]), axis=-1)
+    return zs, xs, bs, cs, dts
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, x: [B, S, C], w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA):
+    """log-space cumulative decay matrix: out[i,j] = sum_{j<l<=i} dA[l],
+    -inf above diagonal.  dA: [..., L] -> [..., L, L]."""
+    l = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(l)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int):
+    """Chunked SSD.  x: [B,S,H,P], dt: [B,S,H] (post-softplus),
+    A: [H] (negative), B/C: [B,S,G,N].  Returns y: [B,S,H,P] and final
+    state [B,H,P,N].
+    """
+    b_, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    l = min(chunk, s)
+    while s % l:
+        l //= 2
+    nc = s // l
+    rep = h // g
+
+    def cshape(t):  # [B,S,...] -> [B,nc,L,...]
+        return t.reshape(b_, nc, l, *t.shape[2:])
+
+    xc, dtc = cshape(x), cshape(dt)
+    Bc = jnp.repeat(cshape(B), rep, axis=3)          # [B,nc,L,H,N]
+    Cc = jnp.repeat(cshape(C), rep, axis=3)
+    dA = dtc * A                                      # [B,nc,L,H]
+    dA_cs = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+
+    # intra-chunk (dual quadratic form on the MXU)
+    L_mat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # [B,nc,H,L,L]
+    scores = jnp.einsum("bclhn,bcshn,bchls->bchls", Cc, Bc, L_mat)
+    y_intra = jnp.einsum("bchls,bcshp,bcsh->bclhp", scores, xc, dtc)
+
+    # chunk end-states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # [B,nc,L,H]
+    states = jnp.einsum("bclhn,bclhp,bclh,bclh->bchpn",
+                        Bc, xc, dtc, decay_to_end)            # [B,nc,H,P,N]
+
+    # inter-chunk sequential recurrence over nc
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # [B,nc,H]
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit prev
+
+    init = jnp.zeros((b_, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                         Cc, prev_states.astype(Cc.dtype),
+                         jnp.exp(dA_cs).astype(Cc.dtype))
+    y = (y_intra + y_inter).reshape(b_, s, h, p)
+    return y, final
+
+
+def ssm_train(params, cfg, x):
+    """Full-sequence Mamba-2 block.  x: [B, S, D] -> [B, S, D]."""
+    s_cfg = cfg.ssm
+    b_, s, d = x.shape
+    nh = s_cfg.num_heads(d)
+    di = s_cfg.d_inner(d)
+    proj = dense(params["in_proj"], x)
+    z, xs, B, C, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(conv_out, np.cumsum(
+        [di, s_cfg.n_groups * s_cfg.d_state]), axis=-1)
+    xs = xs.reshape(b_, s, nh, s_cfg.head_dim)
+    B = B.reshape(b_, s, s_cfg.n_groups, s_cfg.d_state)
+    C = C.reshape(b_, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, _ = ssd_scan(xs.astype(jnp.float32), dt, A,
+                    B.astype(jnp.float32), C.astype(jnp.float32),
+                    chunk=s_cfg.chunk)
+    y = y + xs.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(b_, s, di).astype(x.dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y)
+
+
+def ssm_prefill(params, cfg, x):
+    """Full-sequence forward that also returns the recurrent cache."""
+    s_cfg = cfg.ssm
+    b_, s, d = x.shape
+    nh = s_cfg.num_heads(d)
+    di = s_cfg.d_inner(d)
+    proj = dense(params["in_proj"], x)
+    z, xs, B, C, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    tail = conv_in[:, -(s_cfg.d_conv - 1):]
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(conv_out, np.cumsum(
+        [di, s_cfg.n_groups * s_cfg.d_state]), axis=-1)
+    xs = xs.reshape(b_, s, nh, s_cfg.head_dim)
+    B = B.reshape(b_, s, s_cfg.n_groups, s_cfg.d_state)
+    C = C.reshape(b_, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_scan(xs.astype(jnp.float32), dt, A,
+                        B.astype(jnp.float32), C.astype(jnp.float32),
+                        chunk=s_cfg.chunk)
+    y = y + xs.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(b_, s, di).astype(x.dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y), {"state": state, "conv": tail}
+
+
+def ssm_cache_init(cfg, batch: int, *, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.num_heads(d)
+    conv_dim = s.d_inner(d) + 2 * s.n_groups * s.d_state
+    return {
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(params, cfg, x, cache):
+    """One-token recurrent update.  x: [B, 1, D]."""
+    s_cfg = cfg.ssm
+    b_, _, d = x.shape
+    nh = s_cfg.num_heads(d)
+    di = s_cfg.d_inner(d)
+    proj = dense(params["in_proj"], x)
+    z, xs, B, C, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)      # [B, 1, conv_dim]
+    hist = jnp.concatenate([cache["conv"], conv_in], axis=1)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu((hist * w[None]).sum(axis=1, keepdims=True)
+                           + params["conv_b"])
+    new_conv = hist[:, 1:]
+    xs, B, C = jnp.split(conv_out, np.cumsum(
+        [di, s_cfg.n_groups * s_cfg.d_state]), axis=-1)
+    xs = xs.reshape(b_, nh, s_cfg.head_dim).astype(jnp.float32)
+    B = B.reshape(b_, s_cfg.n_groups, s_cfg.d_state).astype(jnp.float32)
+    C = C.reshape(b_, s_cfg.n_groups, s_cfg.d_state).astype(jnp.float32)
+    rep = nh // s_cfg.n_groups
+    B = jnp.repeat(B, rep, axis=1)                      # [B, H, N]
+    C = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                             # [B, H]
+    state = cache["state"] * decay[..., None, None] + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dt, xs, B)
+    y = jnp.einsum("bhpn,bhn->bhp", state, C) + xs * params["D"][:, None]
+    y = y.reshape(b_, 1, di).astype(x.dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    return dense(params["out_proj"], y), {"state": state, "conv": new_conv}

@@ -1,0 +1,7 @@
+"""Optimizer substrate: AdamW with fp32 master weights, global-norm
+clipping, warmup+cosine schedule, and error-feedback int8 gradient
+compression (DP all-reduce volume reduction)."""
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init, adamw_update, clip_by_global_norm, global_norm)
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim import compress  # noqa: F401

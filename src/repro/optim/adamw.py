@@ -1,0 +1,74 @@
+"""AdamW with fp32 master weights.
+
+Model params stay in their compute dtype (bf16); the optimizer carries an
+fp32 master copy + moments.  All state tensors inherit the param sharding
+(ZeRO-style sharding comes from the param specs already spreading large
+axes over 'data'/'model'; see sharding/rules.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    count: jax.Array      # [] int32
+    master: object        # fp32 copy of params
+    mu: object            # first moment (fp32)
+    nu: object            # second moment (fp32)
+
+
+def adamw_init(params) -> AdamState:
+    # copy=True: fp32 leaves must not alias params (donation safety)
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(jnp.zeros((), jnp.int32),
+                     jax.tree.map(f32, params),
+                     jax.tree.map(zeros, params),
+                     jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state: AdamState, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    """Returns (new_params, new_state).  ``lr`` may be a traced scalar."""
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        w = w - lr * (step + weight_decay * w)
+        return m, v, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_w = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, w) for g, m, v, w in
+           zip(flat_g, flat_m, flat_v, flat_w)]
+    mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    flat_p = treedef.flatten_up_to(params)
+    new_params = jax.tree.unflatten(
+        treedef, [w.astype(p.dtype) for w, p in
+                  zip([o[2] for o in out], flat_p)])
+    return new_params, AdamState(count, master, mu, nu)

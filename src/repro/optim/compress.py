@@ -1,0 +1,59 @@
+"""Error-feedback int8 gradient compression.
+
+Reduces DP all-reduce volume 4x (fp32->int8 + per-tensor scale).  The
+quantization error is carried in a residual buffer and added back next
+step (error feedback, Seide et al. 2014 / Karimireddy et al. 2019), which
+preserves convergence (tested in tests/test_optim.py).
+
+On a real pod this wraps the gradient all-reduce inside ``shard_map``
+(quantize -> psum int32 -> dequantize); under GSPMD-only programs we
+apply quantize+dequantize around the (automatic) all-reduce, which
+models the numerics exactly and the wire volume analytically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: object    # same structure as grads, fp32
+
+
+def ef_init(params) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize(x):
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState):
+    """Returns (decompressed grads as seen post-allreduce, new EF state)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _quantize(x)
+        d = _dequantize(q, s)
+        return d, x - d
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = jax.tree.unflatten(treedef, [o[0] for o in out])
+    res = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return deq, EFState(res)
+
+
+def wire_bytes(grads) -> int:
+    """Analytic all-reduce volume with/without compression."""
+    n = sum(int(jnp.size(g)) for g in jax.tree.leaves(grads))
+    return {"fp32": 4 * n, "int8": n + 4 * len(jax.tree.leaves(grads))}

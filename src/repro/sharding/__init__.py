@@ -1,0 +1,3 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_axes, cache_specs, make_shardings, param_specs, train_batch_specs,
+    train_state_specs)

@@ -1,0 +1,240 @@
+"""Named-axis sharding rules: pytree paths -> PartitionSpec.
+
+Strategy (DESIGN.md §3 Parallelism):
+
+* weights: TP axis over ``model`` (heads / d_ff / experts / vocab) and an
+  FSDP axis over ``data`` on the other large dim where divisible --
+  optimizer state inherits the same specs, so Adam moments are spread
+  over data*model chips (ZeRO-flavoured without extra machinery);
+* weights are replicated over ``pod``; gradients all-reduce across pods;
+* the paper's partitioner analogy: the ``model``-axis split of a sparse
+  operand is nnz-balanced by ``core/partitioner.shard_blocks_by_k``, and
+  the TP SpMM reduction is the paper's "final reduction across tiles";
+* activations: batch over ('pod','data'); KV cache sequence over 'model'
+  (flash-decoding style split-K softmax falls out of GSPMD); batch-1
+  long-context shards sequence over ('data','model').
+
+Divisibility fallback: any dim not divisible by its axis product is left
+unsharded (replicated on that axis) -- the "logical rules + fallback"
+contract that lets one rule set serve all ten architectures.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+import re
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(mesh, dim: int, names):
+    """Return ``names`` if dim divides by their product, else None."""
+    if isinstance(names, str):
+        names = (names,)
+    names = tuple(n for n in names if n in mesh.axis_names)
+    if not names:
+        return None
+    return names if dim % _axis_size(mesh, names) == 0 else None
+
+
+def _spec(mesh, shape, base_ndim, last_dims):
+    """PartitionSpec: leading (stacking) dims None, trailing per rule.
+
+    ``last_dims``: tuple of axis-name-or-None for the final ``base_ndim``
+    dims, each checked for divisibility.
+    """
+    lead = len(shape) - base_ndim
+    spec = [None] * lead
+    for d, names in zip(shape[lead:], last_dims):
+        fit = _fit(mesh, d, names) if names else None
+        if fit is None:
+            spec.append(None)
+        else:
+            spec.append(fit if len(fit) > 1 else fit[0])
+    return P(*spec)
+
+
+# -- activation constraints ----------------------------------------------------
+#
+# GSPMD sharding propagation through nested lax.scan carries is best-effort
+# and in practice drops the batch sharding at loop boundaries (verified on
+# the llama train_4k dry-run: score-space ops ran with global batch).  The
+# model code therefore re-anchors activations at block boundaries with
+# ``constrain`` -- a no-op unless a mesh was installed via
+# ``activation_mesh`` (smoke tests / single-device runs never see it).
+
+_ACT_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_activation_mesh", default=None)
+
+_GROUPS = {
+    "batch": ("pod", "data"),
+    "model": ("model",),
+    "seq": ("pod", "data", "model"),
+}
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    """Install ``mesh`` for activation constraints during tracing."""
+    tok = _ACT_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(tok)
+
+
+def current_mesh():
+    """The mesh installed by ``activation_mesh`` (None outside)."""
+    return _ACT_MESH.get()
+
+
+def constrain(x, *dims):
+    """with_sharding_constraint by logical dim group names.
+
+    ``dims``: per-dimension group name ('batch'|'model'|'seq'|mesh axis)
+    or None; shorter than ndim is padded with None.  Axes absent from the
+    installed mesh or non-divisible dims degrade to None.
+    """
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return x
+    spec = []
+    padded = list(dims) + [None] * (x.ndim - len(dims))
+    for d, names in zip(x.shape, padded):
+        if names is None:
+            spec.append(None)
+            continue
+        cand = _GROUPS.get(names, (names,))
+        cand = tuple(n for n in cand if n in mesh.axis_names)
+        prod = math.prod(mesh.shape[n] for n in cand) if cand else 1
+        if cand and d % prod == 0:
+            spec.append(cand if len(cand) > 1 else cand[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# -- parameter rules ---------------------------------------------------------
+
+_PARAM_RULES = [
+    # (path regex, base_ndim, last-dim axes)
+    (r"\['table'\]$",                2, ("model", "data")),
+    (r"\['(wq|wk|wv)'\]\['w'\]$",    2, ("data", "model")),
+    (r"\['(wq|wk|wv)'\]\['b'\]$",    1, ("model",)),
+    (r"\['wo'\]\['w'\]$",            2, ("model", "data")),
+    (r"\['q'\]\['a'\]\['w'\]$",      2, ("data", None)),
+    (r"\['q'\]\['b'\]\['w'\]$",      2, (None, "model")),
+    (r"\['q'\]\['w'\]\['w'\]$",      2, ("data", "model")),
+    (r"\['kv_a'\]\['w'\]$",          2, ("data", None)),
+    (r"\['kv_b'\]\['w'\]$",          2, (None, "model")),
+    (r"\['(up|gate)'\]\['w'\]$",     2, ("data", "model")),
+    (r"\['(up|gate)'\]\['b'\]$",     1, ("model",)),
+    (r"\['down'\]\['w'\]$",          2, ("model", "data")),
+    (r"\['down'\]\['b'\]$",          1, (None,)),
+    (r"\['(w_gate|w_up)'\]$",        3, ("model", "data", None)),
+    (r"\['w_down'\]$",               3, ("model", "data", None)),
+    (r"\['router'\]",                2, (None, None)),
+    (r"\['in_proj'\]\['w'\]$",       2, ("data", None)),
+    (r"\['out_proj'\]\['w'\]$",      2, ("model", "data")),
+    (r"\['values'\]$",               3, ("model", None, None)),  # BSR blocks
+]
+
+
+def _param_spec_for(mesh, path_str: str, shape) -> P:
+    for pat, base, dims in _PARAM_RULES:
+        if re.search(pat, path_str):
+            return _spec(mesh, shape, base, dims)
+    if len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128:
+        return _spec(mesh, shape, 2, ("data", "model"))  # generic 2D weight
+    return P()  # norms, scalars, biases: replicated
+
+
+def param_specs(params, mesh):
+    """Pytree of PartitionSpec matching ``params`` (SDS or arrays)."""
+    def f(path, leaf):
+        return _param_spec_for(mesh, jax.tree_util.keystr(path), leaf.shape)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# -- train state --------------------------------------------------------------
+
+def train_state_specs(state, mesh):
+    """TrainState: params/master/moments share param specs; scalars
+    replicated."""
+    def f(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        if leaf.ndim == 0:
+            return P()
+        # strip the TrainState field prefix so param rules match
+        return _param_spec_for(mesh, ps, leaf.shape)
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+def train_batch_specs(batch, mesh):
+    ba = batch_axes(mesh)
+
+    def f(_, leaf):
+        if leaf.ndim == 0:
+            return P()
+        fit = _fit(mesh, leaf.shape[0], ba)
+        first = (fit if fit and len(fit) > 1 else
+                 (fit[0] if fit else None))
+        return P(first, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(f, batch)
+
+
+# -- caches --------------------------------------------------------------------
+
+def cache_specs(caches, mesh, *, batch: int):
+    """KV / state caches.  Layout [L, B, S, ...] (stacked scan axis first).
+
+    batch >= |pod|*|data|  -> B over ('pod','data'), S over 'model';
+    batch == 1 (long ctx)  -> S over ('data','model') (+'pod' if present).
+    """
+    ba = batch_axes(mesh)
+    b_fit = batch % _axis_size(mesh, ba) == 0 if ba else False
+    seq_axes = ("model",) if b_fit else tuple(
+        a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    def f(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        spec = [None] * leaf.ndim
+        # dim 0 = stacked layer axis; dim 1 = batch
+        if leaf.ndim >= 2 and shape[1] == batch and b_fit:
+            spec[1] = ba if len(ba) > 1 else ba[0]
+        if re.search(r"\['(k|v|latent|k_rope|xk|xv)'\]$", ps) and leaf.ndim >= 3:
+            fit = _fit(mesh, shape[2], seq_axes)
+            if fit:
+                spec[2] = fit if len(fit) > 1 else fit[0]
+        elif re.search(r"\['state'\]$", ps) and leaf.ndim >= 3:
+            fit = _fit(mesh, shape[2], "model")   # heads
+            if fit:
+                spec[2] = fit[0]
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+# -- convenience ----------------------------------------------------------------
+
+def make_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

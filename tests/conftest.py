@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS device-count here -- smoke tests and benches
+# must see the 1 real CPU device (the 512-device override is exclusively
+# for launch/dryrun.py, per the brief).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,155 @@
+"""Core library invariants: BSR container, static partitioner, TP SpMM.
+Property-based (hypothesis) where the invariant is structural."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks, partitioner, static_sparse as ssp
+from repro.core.bsr import BlockSparseMatrix
+
+
+# -- BSR ------------------------------------------------------------------------
+
+@given(mb=st.integers(1, 8), kb=st.integers(1, 8),
+       b=st.sampled_from([1, 4, 8, 16]), density=st.floats(0.05, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_bsr_dense_roundtrip(mb, kb, b, density):
+    m, k = mb * b, kb * b
+    mask = masks.random_block_mask(m, k, b, density, seed=mb * 7 + kb)
+    bsr = BlockSparseMatrix.from_mask(mask, b, init="normal",
+                                      key=jax.random.PRNGKey(0))
+    dense = bsr.to_dense()
+    back = BlockSparseMatrix.from_dense(dense, b)
+    np.testing.assert_allclose(np.asarray(back.to_dense()),
+                               np.asarray(dense), rtol=1e-6)
+    assert back.nnz_blocks <= bsr.nnz_blocks  # zero-valued blocks may drop
+
+
+def test_bsr_block_mask_roundtrip():
+    mask = masks.random_block_mask(128, 256, 16, 0.3, seed=3)
+    bsr = BlockSparseMatrix.from_mask(mask, 16)
+    assert (bsr.block_mask() == mask).all()
+
+
+# -- static partitioner ------------------------------------------------------------
+
+@given(kb=st.integers(4, 64), q=st.integers(1, 8), seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_balanced_splits_cover_and_monotone(kb, q, seed):
+    q = min(q, kb)
+    mask = masks.random_block_mask(kb * 4, kb * 4, 4, 0.3, seed=seed)
+    bounds = partitioner.balanced_k_splits(mask, q)
+    assert bounds[0] == 0 and bounds[-1] == mask.shape[1]
+    assert (np.diff(bounds) >= 1).all()
+
+
+def test_balanced_beats_even_on_skewed_pattern():
+    """The paper's Fig 1a claim: nnz-balanced uneven splits beat fixed
+    equal splits on a skewed pattern."""
+    kb = 64
+    mask = np.zeros((32, kb), bool)
+    mask[:, :8] = True          # all nnz in the first 8 block-cols
+    mask[0, :] = True
+    q = 8
+    bounds_bal = partitioner.balanced_k_splits(mask, q)
+    col_nnz = mask.sum(0)
+    loads_bal = [col_nnz[a:z].sum() for a, z in
+                 zip(bounds_bal[:-1], bounds_bal[1:])]
+    bounds_even = partitioner.even_k_splits(kb, q)
+    loads_even = [col_nnz[a:z].sum() for a, z in
+                  zip(bounds_even[:-1], bounds_even[1:])]
+    assert max(loads_bal) < max(loads_even)
+
+
+@given(seed=st.integers(0, 50), q=st.sampled_from([2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_shard_blocks_partition_of_blocks(seed, q):
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(seed), 128, 256, 8,
+                                   0.4, pattern_seed=seed)
+    sb = partitioner.shard_blocks_by_k(bsr, q)
+    assert sb.real_counts.sum() == bsr.nnz_blocks
+    # every real block's column lies within its shard's bounds
+    for s in range(q):
+        cnt = sb.real_counts[s]
+        cols = np.asarray(sb.col_idx[s][:cnt])
+        assert (cols >= sb.boundaries[s]).all()
+        assert (cols < sb.boundaries[s + 1]).all()
+
+
+def test_sharded_spmm_matches_dense():
+    """Stacked shard layout computes the same product (the paper's
+    distribute->local-dot->reduce equals the undistributed matmul)."""
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 128, 256, 8, 0.3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+    sb = partitioner.shard_blocks_by_k(bsr, 4)
+    from repro.core.tp import tp_spmm_gspmd
+    y = tp_spmm_gspmd(sb, x)
+    want = jnp.asarray(bsr.to_dense()) @ x
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pack_tiles_reconstruction():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 256, 256, 16, 0.2)
+    packing = partitioner.pack_tiles(bsr, 128, 128)
+    # scatter tiles back into a dense matrix
+    dense = np.zeros(packing.shape, np.float32)
+    for t in range(packing.num_tiles):
+        r, c = int(packing.tile_rows[t]), int(packing.tile_cols[t])
+        dense[r * 128:(r + 1) * 128, c * 128:(c + 1) * 128] += \
+            np.asarray(packing.values[t])
+    np.testing.assert_allclose(dense, np.asarray(bsr.to_dense()), rtol=1e-6)
+    assert 0 < packing.occupancy <= 1.0
+
+
+# -- static SpMM + autodiff ----------------------------------------------------------
+
+def test_spmm_grads_match_dense():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 64, 96, 8, 0.5)
+    x = jax.random.normal(jax.random.PRNGKey(1), (96, 16))
+    rows, cols = np.asarray(bsr.row_idx), np.asarray(bsr.col_idx)
+    f = ssp.make_spmm(rows, cols, bsr.grid, bsr.block_size)
+
+    def loss_sparse(values, x):
+        return (f(values, x) ** 2).sum()
+
+    def loss_dense(values, x):
+        d = bsr.with_values(values).to_dense()
+        return ((d @ x) ** 2).sum()
+
+    gv_s, gx_s = jax.grad(loss_sparse, argnums=(0, 1))(
+        jnp.asarray(bsr.values), x)
+    gv_d, gx_d = jax.grad(loss_dense, argnums=(0, 1))(
+        jnp.asarray(bsr.values), x)
+    np.testing.assert_allclose(np.asarray(gx_s), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gv_s), np.asarray(gv_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_t_and_sddmm():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 64, 96, 8, 0.5)
+    dy = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    x = jax.random.normal(jax.random.PRNGKey(2), (96, 16))
+    got_t = ssp.spmm_t(bsr, dy)
+    want_t = jnp.asarray(bsr.to_dense()).T @ dy
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(want_t),
+                               rtol=1e-4, atol=1e-4)
+    got_s = ssp.sddmm(bsr, dy, x)
+    full = dy @ x.T                         # [m, k]
+    b = bsr.block_size
+    for z in range(bsr.nnz_blocks):
+        r, c = int(bsr.row_idx[z]), int(bsr.col_idx[z])
+        np.testing.assert_allclose(
+            np.asarray(got_s[z]),
+            np.asarray(full[r * b:(r + 1) * b, c * b:(c + 1) * b]),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_flops_accounting():
+    from repro.core.bsr import dense_flops, sparse_flops
+    assert dense_flops(64, 64, 8) == 2 * 64 * 64 * 8
+    # paper §3: sparse FLOPs do not depend on block size
+    assert sparse_flops(64, 64, 8, 0.25) == 2 * 64 * 64 * 8 * 0.25

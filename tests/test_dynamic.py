@@ -1,0 +1,106 @@
+"""Dynamic sparsity (paper §3.3): encoder, capacity bound, planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dynamic_sparse as dsp, masks, planner
+from repro.core.bsr import BlockSparseMatrix
+
+
+def test_encode_decode_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 96))
+    mask = jnp.asarray(masks.random_block_mask(64, 96, 8, 0.4, seed=1))
+    nnz = int(mask.sum())
+    op = dsp.encode(w, mask, block_size=8, nnz_max=nnz + 3)
+    want = np.asarray(w) * np.repeat(np.repeat(np.asarray(mask), 8, 0), 8, 1)
+    np.testing.assert_allclose(np.asarray(op.to_dense()), want, rtol=1e-6)
+    assert int(op.nnz) == nnz
+
+
+def test_encode_overflow_drops():
+    """Capacity bound: blocks beyond nnz_max are dropped (bucket
+    overflow, paper A.2) -- deterministically, row-major last."""
+    w = jnp.ones((64, 64))
+    mask = jnp.ones((8, 8), bool)
+    op = dsp.encode(w, mask, block_size=8, nnz_max=10)
+    assert int(op.nnz) == 10
+    dense = np.asarray(op.to_dense())
+    # first 10 blocks in row-major order kept
+    kept = dense.reshape(8, 8, 8, 8).transpose(0, 2, 1, 3).sum((2, 3)) > 0
+    assert kept.reshape(-1)[:10].all() and not kept.reshape(-1)[10:].any()
+
+
+def test_dspmm_matches_static():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 128, 128, 16, 0.3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 5)
+    from repro.core import static_sparse as ssp
+    np.testing.assert_allclose(np.asarray(dsp.dspmm(op, x)),
+                               np.asarray(ssp.spmm(bsr, x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dspmm_grad():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 64, 64, 8, 0.5)
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+
+    def loss(vals, x):
+        o = dsp.DynamicOperand(vals, op.row_idx, op.col_idx, op.nnz,
+                               op.shape, op.block_size)
+        return (dsp.dspmm(o, x) ** 2).sum()
+
+    gv, gx = jax.grad(loss, argnums=(0, 1))(op.values, x)
+    assert np.isfinite(np.asarray(gv)).all()
+    assert np.isfinite(np.asarray(gx)).all()
+
+    def loss_dense(vals, x):
+        o = dsp.DynamicOperand(vals, op.row_idx, op.col_idx, op.nnz,
+                               op.shape, op.block_size)
+        return ((o.to_dense() @ x) ** 2).sum()
+    gv_d, gx_d = jax.grad(loss_dense, argnums=(0, 1))(op.values, x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(gv_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- planner -----------------------------------------------------------------------
+
+@given(mkn=st.sampled_from([(1024, 1024, 256), (4096, 4096, 512),
+                            (2048, 512, 64)]),
+       d_max=st.sampled_from([1/32, 1/16, 1/4]),
+       b=st.sampled_from([4, 8, 16]),
+       units=st.sampled_from([4, 16, 64]))
+@settings(max_examples=30, deadline=None)
+def test_planner_respects_budget(mkn, d_max, b, units):
+    m, k, n = mkn
+    plan = planner.plan_dynamic(m, k, n, d_max=d_max, block_size=b,
+                                units=units)
+    assert plan.total_partitions <= units
+    # bucket capacity covers the worst admissible pattern with headroom
+    total_blocks = (m // b) * (k // b) * d_max
+    assert plan.nnz_max_blocks >= total_blocks
+
+
+def test_planner_prefers_more_splits_for_bigger_problems():
+    small = planner.plan_dynamic(512, 512, 64, d_max=1/16, block_size=16,
+                                 units=64)
+    large = planner.plan_dynamic(8192, 8192, 64, d_max=1/16, block_size=16,
+                                 units=64)
+    assert large.total_partitions >= small.total_partitions
+
+
+# -- pruning / dynamic sparse training ------------------------------------------------
+
+def test_rigl_update_preserves_density():
+    from repro.core.pruning import rigl_update
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    g = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    mask = jnp.asarray(masks.random_block_mask(64, 64, 8, 0.5, seed=2))
+    new = rigl_update(w, g, mask, block_size=8, fraction=0.3,
+                      rng=jax.random.PRNGKey(3))
+    assert int(new.sum()) == int(mask.sum())
+    assert bool((new != mask).any())

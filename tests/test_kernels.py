@@ -1,0 +1,123 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes, block sizes, densities and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dynamic_sparse as dsp
+from repro.core import masks
+from repro.core.bsr import BlockSparseMatrix
+from repro.kernels.bs_attn import ops as bsa_ops
+from repro.kernels.bs_attn.ref import bs_attn_ref
+from repro.kernels.bsmm import ops as bsmm_ops
+from repro.kernels.bsmm.ref import bsmm_ref
+from repro.kernels.dense_mm import ops as dmm_ops
+from repro.kernels.dense_mm.ref import dense_mm_ref
+from repro.kernels.dsmm import ops as dsmm_ops
+from repro.kernels.dsmm.ref import dsmm_ref
+from repro.kernels.gmm import ops as gmm_ops
+from repro.kernels.gmm.ref import gmm_ref
+
+
+def _tol(dtype):
+    # fp32 accumulation-order differences grow with K; bf16 inputs coarser
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 64), (256, 512, 128),
+                                   (384, 256, 96)])
+@pytest.mark.parametrize("b", [1, 4, 8, 16])
+@pytest.mark.parametrize("density", [0.0625, 0.25, 1.0])
+def test_bsmm_shapes(m, k, n, b, density):
+    key = jax.random.PRNGKey(hash((m, k, n, b)) % 2**31)
+    bsr = BlockSparseMatrix.random(key, m, k, b, density)
+    x = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    got = bsmm_ops.bsmm(bsr, x, interpret=True)
+    want = bsmm_ref(bsr, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsmm_dtypes(dtype):
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 256, 256, 16,
+                                   0.25, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 64), dtype)
+    got = bsmm_ops.bsmm(bsr, x, interpret=True)
+    want = bsmm_ref(bsr, x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_bsmm_empty_rows_covered():
+    """Rows with no non-zero blocks must still produce zero output."""
+    mask = np.zeros((4, 4), bool)
+    mask[0, 0] = mask[2, 1] = True      # rows 1, 3 empty
+    bsr = BlockSparseMatrix.from_mask(mask, 16, init="normal",
+                                      key=jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    got = bsmm_ops.bsmm(bsr, x, interpret=True)
+    want = bsmm_ref(bsr, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(np.asarray(got)[16:32]).max() == 0
+
+
+@pytest.mark.parametrize("b", [4, 16])
+@pytest.mark.parametrize("density", [0.1, 0.5])
+def test_dsmm(b, density):
+    m = k = 256
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), m, k, b, density)
+    cap = bsr.nnz_blocks + 7
+    op = dsp.encode_from_bsr(bsr, nnz_max=cap)
+    x = jax.random.normal(jax.random.PRNGKey(1), (k, 64))
+    got = dsmm_ops.dsmm(op, x, interpret=True)
+    want = dsmm_ref(op, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("e,tm", [(4, 32), (8, 64)])
+def test_gmm(e, tm):
+    t, d, f = 256, 128, 96
+    x = jax.random.normal(jax.random.PRNGKey(0), (t, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (e, d, f))
+    ids = jax.random.randint(jax.random.PRNGKey(2), (t // tm,), 0, e)
+    got = gmm_ops.gmm(x, w, ids, tm=tm, interpret=True)
+    want = gmm_ref(x, w, ids, tm=tm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 128, 64)])
+def test_dense_mm(m, k, n):
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    got = dmm_ops.dense_mm(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense_mm_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("pattern", ["causal_local", "banded", "full"])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_bs_attn(pattern, softcap):
+    h, s, dh = 2, 512, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (h, s, dh)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (h, s, dh)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (h, s, dh))
+    nb = s // 128
+    if pattern == "causal_local":
+        bm = masks.local_global_attention_mask(nb, nb, window_blocks=2,
+                                               global_blocks=1)
+    elif pattern == "banded":
+        bm = masks.banded_block_mask(s, s, 128, 1)
+        bm = np.tril(bm)
+        bm[np.diag_indices(nb)] = True
+    else:
+        bm = np.tril(np.ones((nb, nb), bool))
+    got = bsa_ops.bs_attn(q, k, v, bm, softcap=softcap, interpret=True)
+    want = bs_attn_ref(q, k, v, bm, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,105 @@
+"""Sharding rules: divisibility fallback, spec shapes, constrain no-op."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models.model import LM
+from repro.sharding import rules
+
+
+from jax.sharding import AbstractMesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _amesh(shape, names=("data", "model")):
+    """Abstract mesh: rule tests need axis sizes, not real devices."""
+    return AbstractMesh(shape, names)
+
+
+def _sizes(mesh):
+    return {n: mesh.shape[n] for n in mesh.axis_names}
+
+
+@pytest.mark.parametrize("name", configs.ARCH_IDS)
+def test_param_specs_exist_and_align(name, mesh):
+    params = configs.param_specs(name)
+    specs = rules.param_specs(params, mesh)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_s = {jax.tree_util.keystr(p): s for p, s in
+              jax.tree_util.tree_leaves_with_path(
+                  specs, is_leaf=lambda x: isinstance(x, P))}
+    for path, leaf in flat_p:
+        key = jax.tree_util.keystr(path)
+        spec = flat_s[key]
+        assert len(spec) <= leaf.ndim, f"{key}: spec longer than rank"
+
+
+def test_divisibility_fallback(mesh):
+    big = _amesh((1, 16))
+    # 14 heads * 64 = 896 divisible by 16; but a 100-wide dim is not
+    sds = {"attn": {"wq": {"w": jax.ShapeDtypeStruct((100, 100),
+                                                     jnp.float32)}}}
+    specs = rules.param_specs(sds, big)
+    # 100 % 16 != 0 -> the model axis falls back to replication
+    assert specs["attn"]["wq"]["w"][1] is None
+
+
+def test_table_rule(mesh):
+    big = _amesh((1, 16))
+    sds = {"embed": {"table": jax.ShapeDtypeStruct((102400, 2048),
+                                                   jnp.float32)}}
+    specs = rules.param_specs(sds, big)
+    assert specs["embed"]["table"][0] == "model"
+
+
+def test_stacked_leading_dims_are_replicated():
+    big = _amesh((2, 4))
+    sds = {"attn": {"wq": {"w": jax.ShapeDtypeStruct((16, 128, 128),
+                                                     jnp.float32)}}}
+    specs = rules.param_specs(sds, big)
+    s = specs["attn"]["wq"]["w"]
+    assert s[0] is None and s[1] == "data" and s[2] == "model"
+
+
+def test_cache_specs_batch_vs_long(mesh):
+    big = _amesh((4, 4))
+    caches = {"k": jax.ShapeDtypeStruct((2, 16, 1024, 4, 64), jnp.bfloat16),
+              "state": jax.ShapeDtypeStruct((2, 16, 8, 64, 16),
+                                            jnp.float32)}
+    specs = rules.cache_specs(caches, big, batch=16)
+    assert specs["k"][1] == "data" and specs["k"][2] == "model"
+    # batch=1 long context: sequence takes every available axis
+    caches1 = {"k": jax.ShapeDtypeStruct((2, 1, 4096, 4, 64), jnp.bfloat16)}
+    specs1 = rules.cache_specs(caches1, big, batch=1)
+    assert specs1["k"][2] == ("data", "model")
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = rules.constrain(x, "batch", None)
+    assert y is x
+
+
+def test_constrain_applies_under_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    x = jnp.ones((4, 4))
+    with rules.activation_mesh(mesh):
+        y = rules.constrain(x, "batch", "model")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+
+def test_train_batch_specs(mesh):
+    big = _amesh((8, 2))
+    batch = {"tokens": jax.ShapeDtypeStruct((16, 128), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((16, 128), jnp.int32)}
+    specs = rules.train_batch_specs(batch, big)
+    assert specs["tokens"][0] == "data"
+    odd = {"tokens": jax.ShapeDtypeStruct((3, 128), jnp.int32)}
+    assert rules.train_batch_specs(odd, big)["tokens"][0] is None

@@ -1,0 +1,79 @@
+"""Mamba-2 SSD: chunked scan vs naive recurrence; decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import ssd_scan
+
+
+def _naive_recurrence(x, dt, A, B, C):
+    """Token-by-token SSM: h = h*exp(dt*A) + dt*B x; y = C.h"""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = np.repeat(np.asarray(B), rep, axis=2)
+    Ch = np.repeat(np.asarray(C), rep, axis=2)
+    xs, dts = np.asarray(x), np.asarray(dt)
+    Ah = np.asarray(A)
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros((b, s, h, p), np.float64)
+    for t in range(s):
+        decay = np.exp(dts[:, t] * Ah)                   # [b, h]
+        state = state * decay[..., None, None] + np.einsum(
+            "bh,bhp,bhn->bhpn", dts[:, t], xs[:, t], Bh[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (48, 16)])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_ssd_scan_matches_recurrence(s, chunk, groups):
+    b, h, p, n = 2, 4, 8, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, groups, n)) * 0.5
+    C = jax.random.normal(jax.random.PRNGKey(9), (b, s, groups, n)) * 0.5
+    y, state = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y_ref, state_ref = _naive_recurrence(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), state_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_train_decode_parity():
+    """Running the block one token at a time reproduces the full-seq
+    output (conv cache + state handoff)."""
+    from repro.configs import mamba2_130m
+    from repro.models.ssm import ssm_init, ssm_train, ssm_decode, \
+        ssm_cache_init
+    cfg = mamba2_130m.make_smoke_config()
+    params = ssm_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_full = ssm_train(params, cfg, x)
+    cache = ssm_cache_init(cfg, b, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        y_t, cache = ssm_decode(params, cfg, x[:, t:t + 1], cache)
+        outs.append(y_t)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_scan_long_state_stability():
+    """Decay keeps the state bounded over long sequences."""
+    b, s, h, p, n = 1, 512, 2, 4, 8
+    x = jnp.ones((b, s, h, p)) * 0.1
+    dt = jnp.ones((b, s, h)) * 0.5
+    A = -jnp.ones((h,))
+    B = jnp.ones((b, s, 1, n)) * 0.1
+    C = jnp.ones((b, s, 1, n)) * 0.1
+    y, state = ssd_scan(x, dt, A, B, C, chunk=64)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(state)).max() < 10.0

@@ -1,0 +1,79 @@
+"""Ad-hoc: top ops by bytes/flops with loop trip multipliers."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, 'src')
+import jax
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.analysis import hlo_cost as hc
+from repro.sharding import rules
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh(multi_pod='multipod' in sys.argv)
+fn, args, in_sh, out_sh, meta = build_cell(arch, shape, mesh)
+with mesh, rules.activation_mesh(mesh):
+    compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
+text = compiled.as_text()
+comps = hc.parse_hlo(text)
+an = hc.Analyzer(comps)
+
+# compute trip multiplier per computation by walking from entry
+import re, collections
+entry = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE).group(1)
+mult = collections.defaultdict(float)
+def walk(name, k):
+    comp = comps.get(name)
+    if comp is None: return
+    mult[name] += k
+    for op in comp.ops:
+        if op.opcode == 'while':
+            m = re.search(r'known_trip_count[^0-9]*(\d+)', op.attrs)
+            trip = int(m.group(1)) if m else 1
+            body = an._called(op.attrs, 'body'); cond = an._called(op.attrs, 'condition')
+            if body: walk(body, k*trip)
+            if cond: walk(cond, k*trip)
+        elif op.opcode in ('call',):
+            cal = an._called(op.attrs, 'to_apply')
+            if cal: walk(cal, k)
+walk(entry, 1.0)
+
+rows = []
+for cname, k in mult.items():
+    comp = comps[cname]
+    for op in comp.ops:
+        if op.opcode in hc._SKIP_BYTES or op.opcode in ('while','call'):
+            continue
+        c = hc.Cost()
+        # reuse single-op logic crudely
+        opnd = sum(hc._shape_bytes(an._operand_type(comp, o)) for o in op.operands)
+        res = hc._shape_bytes(op.type_str)
+        if op.opcode in ('dynamic-update-slice','scatter'):
+            b = 3*(hc._shape_bytes(an._operand_type(comp, op.operands[1])) if len(op.operands)>1 else 0)
+        elif op.opcode in ('dynamic-slice','gather'):
+            b = 2*res
+        elif op.opcode == 'fusion':
+            callee_name = an._called(op.attrs, 'calls'); callee = comps.get(callee_name)
+            root = callee.ops[-1] if callee and callee.ops else None
+            if root is not None and root.opcode in ('dynamic-update-slice','scatter'):
+                alias = max((hc._shape_bytes(an._operand_type(comp,o)) for o in op.operands), default=0)
+                b = max(opnd-alias,0)+max(res-alias,0)+2*hc._update_bytes(callee, root)
+            else:
+                b = opnd+res
+        else:
+            b = opnd+res
+        f = 0.0
+        if op.opcode=='dot': f = an._dot_flops(comp, op)
+        elif op.opcode=='fusion':
+            cal = an._called(op.attrs,'calls')
+            if cal: f = an._flops_only(cal)
+        rows.append((b*k, f*k, k, cname, op.opcode, op.name, op.type_str[:60]))
+
+rows.sort(reverse=True)
+print('TOP 25 BY BYTES (bytes*trip, flops*trip, trip, comp, opcode, name, type)')
+for r in rows[:25]:
+    print(f'{r[0]:.3e} {r[1]:.3e} {r[2]:8.0f} {r[3][:30]:30s} {r[4]:22s} {r[5][:28]:28s} {r[6]}')
+rows.sort(key=lambda r: -r[1])
+print('\nTOP 15 BY FLOPS')
+for r in rows[:15]:
+    print(f'{r[0]:.3e} {r[1]:.3e} {r[2]:8.0f} {r[3][:30]:30s} {r[4]:22s} {r[5][:28]:28s} {r[6]}')

@@ -1,0 +1,105 @@
+"""Hillclimb driver: lower one (arch, shape) cell with a named variant
+and report the roofline delta vs the recorded baseline.
+
+    python tools/perf_cell.py <arch> <shape> <variant> [multipod]
+
+Variants (composable with '+'):
+    base      paper-faithful baseline (row attention schedule, fp32 MoE
+              combine, cumsum ranking)
+    bal       balanced (folded-causal pair) attention schedule
+    moe       bf16 MoE combine + sort-based slot ranking
+    pad16     pad attention heads to a model-axis multiple (internvl2)
+    dots      remat policy "dots" (save matmul outputs)
+    flash     analysis-only: price attention score tiles as VMEM-resident
+              (the Pallas bs_attn fused-kernel view)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.analysis.hlo_cost import analyze_hlo_text  # noqa: E402
+from repro.analysis.roofline import V5E, roofline_terms  # noqa: E402
+from repro.launch.dryrun import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding import rules  # noqa: E402
+
+
+def apply_variant(cfg, variant: str):
+    parts = set(variant.split("+"))
+    kw = {}
+    if "bal" in parts:
+        kw["attn_schedule"] = "balanced"
+    if "moe" in parts and cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, combine_dtype="bfloat16",
+                                        ranking="sort")
+    if "smmoe" in parts and cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, combine_dtype="bfloat16",
+                                        ranking="sort", impl="shard_map")
+    if "pad16" in parts:
+        kw["num_heads"] = ((cfg.num_heads + 15) // 16) * 16
+    if "dots" in parts:
+        kw["remat"] = "dots"
+    if "sp" in parts:
+        kw["seq_shard"] = True
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def main():
+    arch, shape, variant = sys.argv[1], sys.argv[2], sys.argv[3]
+    multipod = len(sys.argv) > 4 and sys.argv[4] == "multipod"
+    cfg = apply_variant(configs.get(arch), variant)
+    mesh = make_production_mesh(multi_pod=multipod)
+    from repro.train.step import TrainHParams
+    hp = TrainHParams(accum=8) if "accum8" in variant else TrainHParams()
+    fn, args, in_sh, out_sh, meta = build_cell(arch, shape, mesh, cfg=cfg,
+                                               hp=hp)
+    with mesh, rules.activation_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    vmem = None
+    if "flash" in variant:
+        # replicate attend_train's tile-shrink to find the score dims
+        s_tot = configs.SHAPES[shape]["seq"] + (
+            cfg.frontend_len if cfg.frontend == "vision" else 0)
+        tq, tkv = min(cfg.attn_tile_q, s_tot), min(cfg.attn_tile_kv, s_tot)
+        while s_tot % tq:
+            tq //= 2
+        while s_tot % tkv:
+            tkv //= 2
+        vmem = {(tq, tkv)}
+    cost = analyze_hlo_text(text, vmem_dims=vmem)
+    roof = roofline_terms(cost, V5E,
+                          model_flops_per_device=meta["model_flops_device"])
+    rec = dict(meta, variant=variant,
+               mesh="2x16x16" if multipod else "16x16",
+               temp_mb=mem.temp_size_in_bytes / 2**20,
+               hlo=dict(flops=cost["flops"], bytes=cost["bytes"],
+                        collective_bytes=cost["collective_bytes"],
+                        collectives=cost["collectives"]),
+               roofline=roof)
+    mesh_tag = "__2x16x16" if multipod else ""
+    out = (f"experiments/perf/{configs.ALIASES.get(arch, arch)}__{shape}"
+           f"__{variant.replace('+','_')}{mesh_tag}.json")
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(f"== {arch} x {shape} [{variant}] ==")
+    print(f"  flops {cost['flops']:.3e}  bytes {cost['bytes']:.3e}  "
+          f"coll {cost['collective_bytes']:.3e}  temp {rec['temp_mb']:.0f}MB")
+    print(f"  compute {roof['t_compute']*1e3:.1f}ms | "
+          f"memory {roof['t_memory']*1e3:.1f}ms | "
+          f"collective {roof['t_collective']*1e3:.1f}ms -> "
+          f"{roof['dominant']}-bound, frac {roof.get('roofline_frac', 0):.4f}")
+
+
+if __name__ == "__main__":
+    main()
