@@ -13,7 +13,7 @@ import numpy as np
 import jax
 
 from benchmarks import cost_model as cm
-from repro.core import masks
+from repro.core import dispatch, masks
 from repro.core.bsr import BlockSparseMatrix
 from repro.core.partitioner import pack_tiles
 
@@ -212,6 +212,30 @@ def fig7_speedup_grid():
     return recs
 
 
+# -- dispatch: the Table-3 crossovers as runtime decisions --------------------------------
+
+def dispatch_decisions():
+    """Ask the autotune layer what it would *run* across the Table 3 /
+    Fig 3a grid and record the chosen route + per-candidate estimates.
+    This is the executable form of the paper's static/dynamic/dense
+    crossover table."""
+    recs = []
+    ctx = dispatch.DispatchContext(allow_pallas=True, differentiable=False)
+    key = jax.random.PRNGKey(0)
+    for m in (1024, 4096):
+        for b in (4, 16):
+            for d in (1 / 4, 1 / 16, 1 / 32):
+                bsr = BlockSparseMatrix.random(key, m, m, b, d)
+                for n in (256, 4096):
+                    rep = dispatch.explain(bsr, n, ctx=ctx)
+                    recs.append(dict(
+                        fig="dispatch", m=m, b=b, density=d, n=n,
+                        chosen=rep["chosen"],
+                        candidates={r: round(s * 1e6, 3) for r, s in
+                                    rep["candidates"].items()}))
+    return recs
+
+
 # -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
 
 def occupancy_study():
@@ -237,4 +261,5 @@ ALL = {
     "fig4c": fig4c_power_law,
     "fig7": fig7_speedup_grid,
     "occupancy": occupancy_study,
+    "dispatch": dispatch_decisions,
 }

@@ -3,6 +3,8 @@
 Public surface:
 
 * ``BlockSparseMatrix``        -- BSR container (static or dynamic pattern)
+* ``dispatch.spmm(_nt)``       -- THE matmul entry point: routed + autotuned
+                                  across dense / static / dynamic backends
 * ``static_sparse.spmm(_nt)``  -- compile-time-pattern SpMM (paper §3.2)
 * ``dynamic_sparse.dspmm(_nt)``-- runtime-pattern SpMM with d_max capacity (§3.3)
 * ``partitioner`` / ``planner``-- compile-time work distribution (§3.2/§3.3)
@@ -12,6 +14,7 @@ Public surface:
 """
 from repro.core.bsr import BlockSparseMatrix, dense_flops, sparse_flops  # noqa: F401
 from repro.core import (  # noqa: F401
+    dispatch,
     dynamic_sparse,
     masks,
     partitioner,

@@ -1,0 +1,550 @@
+"""Unified sparse-matmul dispatch + autotune (PopSparse §3, Table 3).
+
+The paper's central claim is that the *right execution strategy* per
+(shape, block size, density, dtype) -- static pre-planned vs dynamic
+bucketed vs plain dense -- is what turns sparsity into real speedups.
+This module is the runtime component that makes that choice.  One entry
+point:
+
+    spmm(operand, x, *, ctx=None) -> y            # Y = W @ X,  X: [k, n]
+
+``operand`` may be
+
+* a dense ``[m, k]`` array            -> dense routes
+* a static ``BlockSparseMatrix``      -> static routes (pattern folded)
+* a ``DynamicOperand`` (or a BSR with
+  device-resident indices)            -> dynamic routes (d_max capacity)
+
+Routes (the execution strategies of Table 3, plus the TPU dense kernel):
+
+    dense_xla       jnp matmul (XLA fuses/pads; the paper's dense baseline)
+    dense_pallas    kernels/dense_mm MXU-tiled kernel
+    static_xla      static_sparse gather/einsum/segment-sum formulation
+    static_pallas   kernels/bsmm tile-packed kernel (compile-time metadata)
+    dynamic_xla     dynamic_sparse._dspmm scatter-add formulation
+    dynamic_pallas  kernels/dsmm slot-walk kernel (runtime metadata)
+
+The decision is autotuned per *logical problem*, not per call: first the
+analytic TPU cost model (``benchmarks.cost_model``, the same one the
+benchmark suite prices Table 3 with) ranks the admissible routes; when
+``ctx.measure`` is set and the inputs are concrete the candidates are
+wall-clock measured once.  Either way the verdict is memoized in a
+process-level decision cache keyed on
+
+    (m, k, n, block_size, density-bucket, dtype, mode)
+
+so steady-state dispatch is a dict hit.  ``explain(...)`` returns the
+full decision report (candidates, estimates, chosen route, cache state)
+for tools such as ``tools/perf_cell.py``.
+
+All decisions are made at trace time from static data (shapes, dtypes,
+host-side density); under ``jax.jit`` the chosen route is baked into the
+compiled program, exactly like PopSparse's ahead-of-time planning.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+import time
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsr import BlockSparseMatrix
+from repro.core.dynamic_sparse import DynamicOperand, _dspmm
+from repro.core import static_sparse as _ssp
+
+Operand = Union[jax.Array, np.ndarray, BlockSparseMatrix, DynamicOperand]
+
+ROUTES = ("dense_xla", "dense_pallas", "static_xla", "static_pallas",
+          "dynamic_xla", "dynamic_pallas")
+MODES = ("auto", "dense", "static", "dynamic") + ROUTES
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DispatchContext:
+    """Per-call-site dispatch policy (ambient default: ``default_ctx``).
+
+    mode          "auto" (cost-model choice), a family ("dense" /
+                  "static" / "dynamic"), or an explicit route id.
+    measure       measure candidate routes once (wall clock, concrete
+                  inputs only) instead of trusting the analytic model.
+    allow_pallas  None = TPU backend only; True/False force-include/
+                  exclude Pallas routes from auto selection.
+    interpret     run Pallas kernels in interpret mode (CPU testing).
+                  Does NOT admit Pallas routes to auto selection --
+                  interpret mode is for forced routes in tests.
+    differentiable  the caller may take gradients through the result
+                  (the default -- training).  The Pallas kernels are
+                  forward-only, so auto/family selection excludes them
+                  unless this is False; explicit route ids always run.
+    cache         consult/fill the process-level decision cache.
+    """
+
+    mode: str = "auto"
+    measure: bool = False
+    allow_pallas: Optional[bool] = None
+    interpret: bool = False
+    differentiable: bool = True
+    cache: bool = True
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown dispatch mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+
+
+default_ctx = DispatchContext()
+_ctx_state = threading.local()
+
+
+def current_ctx() -> DispatchContext:
+    return getattr(_ctx_state, "ctx", None) or default_ctx
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: DispatchContext):
+    """Install ``ctx`` as the ambient dispatch context (trace-scoped)."""
+    prev = getattr(_ctx_state, "ctx", None)
+    _ctx_state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _ctx_state.ctx = prev
+
+
+def _pallas_ok(ctx: DispatchContext) -> bool:
+    """May auto/family selection consider Pallas routes?  Requires a
+    TPU backend (or an explicit allow_pallas=True, e.g. for analytic
+    what-would-run reports) AND a forward-only caller: the Pallas
+    kernels define no VJPs, so differentiable call sites must stay on
+    the XLA routes."""
+    if ctx.differentiable:
+        return False
+    if ctx.allow_pallas is not None:
+        return ctx.allow_pallas
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Decision cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    route: str
+    est_seconds: Dict[str, float]     # per-candidate estimate
+    source: str                       # "analytic" | "measured" | "forced"
+    key: Tuple
+
+
+_decision_cache: Dict[Tuple, Decision] = {}
+_cache_lock = threading.Lock()
+
+
+def cache_stats() -> dict:
+    return {"entries": len(_decision_cache),
+            "keys": sorted(_decision_cache)}
+
+
+def clear_cache():
+    with _cache_lock:
+        _decision_cache.clear()
+
+
+def _density_bucket(density: float) -> float:
+    """Bucket density to the nearest power of two (Table 3 uses 1/2^k
+    grids); keeps the cache key stable across nnz jitter."""
+    if density <= 0:
+        return 0.0
+    if density >= 1.0:
+        return 1.0
+    return 2.0 ** round(math.log2(density))
+
+
+def _ctx_fingerprint(ctx: DispatchContext) -> Tuple:
+    """The context fields that change what decide() would answer or how
+    the chosen route executes -- all of them must be part of the cache
+    key or one context's verdict leaks into an incompatible one."""
+    return (ctx.mode, ctx.measure, ctx.interpret, ctx.differentiable,
+            _pallas_ok(ctx))
+
+
+def _cache_key(kind: str, m: int, k: int, n: int, b: int, density: float,
+               dtype, ctx: DispatchContext) -> Tuple:
+    return (kind, m, k, n, b, _density_bucket(density),
+            jnp.dtype(dtype).name) + _ctx_fingerprint(ctx)
+
+
+# ---------------------------------------------------------------------------
+# Analytic estimates (benchmarks.cost_model when importable)
+# ---------------------------------------------------------------------------
+
+def _cost_model():
+    try:
+        from benchmarks import cost_model as cm
+        return cm
+    except ImportError:
+        return None
+
+
+def _expected_tiles(m: int, k: int, b: int, density: float,
+                    tm: int = 128, tk: int = 128) -> int:
+    """Expected non-empty (tm, tk) tiles for a random pattern: the
+    analytic stand-in for ``partitioner.pack_tiles`` occupancy (the
+    real packing is only computed on the execution path)."""
+    mt, kt = max(1, math.ceil(m / tm)), max(1, math.ceil(k / tk))
+    per_tile = max(1, (min(tm, m) // b) * (min(tk, k) // b))
+    p_nonempty = 1.0 - (1.0 - min(density, 1.0)) ** per_tile
+    # every output row-tile is covered (empty rows get one zero tile)
+    return max(mt, math.ceil(mt * kt * p_nonempty))
+
+
+def _roofline_fallback(route: str, m, k, n, b, density, bytes_el) -> float:
+    """Crude FLOP/bandwidth roofline used only when benchmarks.cost_model
+    is not importable (library installed without the benchmarks tree)."""
+    peak, bw = 197e12, 819e9
+    if route.startswith("dense"):
+        flops, mem = 2.0 * m * k * n, (m * k + k * n + m * n) * bytes_el
+    elif route.startswith("static"):
+        flops = 2.0 * m * k * n * density
+        mem = (m * k * density + k * n + m * n) * bytes_el
+    else:
+        flops = 2.0 * m * k * n * density * 1.5   # capacity + encode pad
+        mem = (m * k * density * 1.5 + k * n + m * n) * bytes_el + m * k / 64
+    return max(flops / peak, mem / bw)
+
+
+def _estimate(route: str, m: int, k: int, n: int, b: int,
+              density: float, dtype) -> float:
+    """Estimated seconds for one route on the TPU target.  XLA and Pallas
+    variants of a family share the kernel-structure estimate; the XLA
+    variant carries a small constant penalty so that on equal footing the
+    purpose-built kernel wins (mirrors measured behaviour)."""
+    bytes_el = max(1, jnp.dtype(dtype).itemsize)
+    fp32 = jnp.dtype(dtype).itemsize >= 4
+    cm = _cost_model()
+    if cm is None:
+        t = _roofline_fallback(route, m, k, n, b, density, bytes_el)
+        return t * (4.0 if fp32 else 1.0) * \
+            (1.15 if route.endswith("_xla") else 1.0)
+    db = cm.B32 if fp32 else cm.B16
+    if route.startswith("dense"):
+        t = cm.dense_time(m, k, n, dtype_bytes=db)
+    elif route.startswith("static"):
+        tiles = _expected_tiles(m, k, b, density)
+        tm = min(128, m)
+        tk = min(128, k)
+        tn = min(512, n)
+        steps = tiles * math.ceil(n / tn)
+        per_step = max(cm._mxu_cycles(tm, tk, tn),
+                       cm._bytes_cycles((tm * tk + tk * tn) * db))
+        t = cm.KernelTime(steps * per_step, 2.0 * m * k * n * density)
+    else:
+        t = cm.dsmm_time(m, k, n, block_size=b, d_max=density,
+                         true_density=density, dtype_bytes=db)
+    if fp32:
+        t = cm.fp32_time(t)
+    return t.seconds * (1.15 if route.endswith("_xla") else 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Route execution
+# ---------------------------------------------------------------------------
+
+def _normalize(operand: Operand):
+    """-> (kind, m, k, block_size, density) with kind in
+    {dense, static, dynamic}."""
+    if isinstance(operand, BlockSparseMatrix):
+        m, k = operand.shape
+        if operand.is_static:
+            return "static", m, k, operand.block_size, operand.density
+        return "dynamic", m, k, operand.block_size, operand.density
+    if isinstance(operand, DynamicOperand):
+        m, k = operand.shape
+        b = operand.block_size
+        density = operand.capacity / max(1, (m // b) * (k // b))
+        return "dynamic", m, k, b, density
+    arr = jnp.asarray(operand) if not hasattr(operand, "ndim") else operand
+    if arr.ndim != 2:
+        raise ValueError(f"dense operand must be 2-D, got shape {arr.shape}")
+    m, k = arr.shape
+    return "dense", m, k, 1, 1.0
+
+
+# families an operand kind can execute (static can always be *run*
+# densely or through the dynamic path; dense/dynamic cannot recover a
+# compile-time pattern)
+_ADMISSIBLE = {"dense": ("dense",),
+               "static": ("static", "dense", "dynamic"),
+               "dynamic": ("dynamic", "dense")}
+
+
+def _candidates(kind: str, ctx: DispatchContext) -> Tuple[str, ...]:
+    if ctx.mode in ROUTES:
+        fam = ctx.mode.split("_")[0]
+        if fam not in _ADMISSIBLE[kind]:
+            raise ValueError(f"route {ctx.mode!r} cannot execute a "
+                             f"{kind} operand")
+        return (ctx.mode,)
+    if ctx.mode in ("dense", "static", "dynamic"):
+        if ctx.mode not in _ADMISSIBLE[kind]:
+            raise ValueError(f"mode {ctx.mode!r} cannot execute a "
+                             f"{kind} operand")
+        fams = [ctx.mode]
+    elif kind == "static":
+        # a static pattern may still be cheaper to run densely (Table 3:
+        # dense wins at high density / tiny blocks)
+        fams = ["static", "dense"]
+    elif kind == "dynamic":
+        fams = ["dynamic", "dense"]
+    else:
+        fams = ["dense"]
+    cands = []
+    for f in fams:
+        cands.append(f"{f}_xla")
+        if _pallas_ok(ctx):
+            cands.append(f"{f}_pallas")
+    return tuple(cands)
+
+
+def _as_dense(operand: Operand) -> jax.Array:
+    if isinstance(operand, (BlockSparseMatrix, DynamicOperand)):
+        return operand.to_dense()
+    return jnp.asarray(operand)
+
+
+def _run_route(route: str, operand: Operand, x: jax.Array,
+               ctx: DispatchContext) -> jax.Array:
+    # dtype contract: every route follows jnp promotion of
+    # (operand dtype, x dtype), like the einsum formulations it replaces
+    if route == "dense_xla":
+        w = _as_dense(operand)
+        rt = jnp.result_type(w.dtype, x.dtype)
+        return jnp.matmul(w.astype(rt), x.astype(rt))
+    if route == "dense_pallas":
+        from repro.kernels.dense_mm import ops as dmm_ops
+        w = _as_dense(operand)
+        rt = jnp.result_type(w.dtype, x.dtype)
+        return dmm_ops.dense_mm(w.astype(rt), x.astype(rt),
+                                interpret=ctx.interpret)
+    if route == "static_xla":
+        return _ssp.spmm_cached(operand, x)
+    if route == "static_pallas":
+        from repro.kernels.bsmm import ops as bsmm_ops
+        return bsmm_ops.bsmm(operand, x, interpret=ctx.interpret)
+    if route in ("dynamic_xla", "dynamic_pallas"):
+        op = operand
+        if isinstance(op, BlockSparseMatrix):   # device-resident indices
+            op = DynamicOperand(
+                jnp.asarray(op.values), jnp.asarray(op.row_idx, jnp.int32),
+                jnp.asarray(op.col_idx, jnp.int32),
+                jnp.asarray(op.nnz_blocks, jnp.int32), op.shape,
+                op.block_size)
+        if route == "dynamic_xla":
+            mb = op.shape[0] // op.block_size
+            return _dspmm(op.values, op.row_idx, op.col_idx, x, mb,
+                          op.block_size)
+        from repro.kernels.dsmm import ops as dsmm_ops
+        return dsmm_ops.dsmm(op, x, interpret=ctx.interpret)
+    raise ValueError(f"unknown route {route!r}")
+
+
+# ---------------------------------------------------------------------------
+# Decide + dispatch
+# ---------------------------------------------------------------------------
+
+def _is_concrete(*arrays) -> bool:
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _dtype_of(operand: Operand):
+    if isinstance(operand, (BlockSparseMatrix, DynamicOperand)):
+        return jnp.dtype(operand.values.dtype)
+    return jnp.dtype(getattr(operand, "dtype", None) or
+                     np.asarray(operand).dtype)
+
+
+def _executable(route: str, ctx: DispatchContext) -> bool:
+    """Can this host actually run the route?  Pallas needs a TPU (or
+    interpret mode); analytic candidates from allow_pallas=True
+    what-would-run reports are not executable off-TPU."""
+    if route.endswith("_xla"):
+        return True
+    return ctx.interpret or jax.default_backend() == "tpu"
+
+
+def _measure_route(route, operand, x, ctx, *, reps: int = 3) -> float:
+    # operand is closed over, not passed: static patterns must stay host
+    # constants (a jit argument would trace the index arrays).
+    run = jax.jit(lambda xx: _run_route(route, operand, xx, ctx))
+    run(x).block_until_ready()                    # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y = run(x)
+    y.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def decide(operand: Operand, n: int, *,
+           ctx: Optional[DispatchContext] = None,
+           x: Optional[jax.Array] = None) -> Decision:
+    """Pick the route for ``operand @ [k, n]``.  Pure function of the
+    cache key; fills the process-level cache.  ``x`` is only used when
+    ``ctx.measure`` is set and the inputs are concrete."""
+    ctx = ctx or current_ctx()
+    kind, m, k, b, density = _normalize(operand)
+    dtype = _dtype_of(operand)
+    key = _cache_key(kind, m, k, n, b, density, dtype, ctx)
+    if ctx.cache:
+        hit = _decision_cache.get(key)
+        if hit is not None:
+            return hit
+    cands = _candidates(kind, ctx)
+    if len(cands) == 1:
+        dec = Decision(cands[0], {cands[0]: _estimate(
+            cands[0], m, k, n, b, density, dtype)}, "forced", key)
+    else:
+        est = {r: _estimate(r, m, k, n, b, density, dtype) for r in cands}
+        source = "analytic"
+        pick_from = est
+        if ctx.measure and x is not None and _is_concrete(
+                x, *(jax.tree_util.tree_leaves(operand))):
+            # only wall-clock routes this host can run; unrunnable
+            # candidates keep their analytic estimate but are never
+            # chosen by a measured verdict
+            runnable = [r for r in cands if _executable(r, ctx)]
+            if runnable:
+                measured = {r: _measure_route(r, operand, x, ctx)
+                            for r in runnable}
+                est = {**est, **measured}
+                pick_from = measured
+                source = "measured"
+        dec = Decision(min(pick_from, key=pick_from.get), est, source, key)
+    if ctx.cache:
+        with _cache_lock:
+            _decision_cache.setdefault(key, dec)
+            dec = _decision_cache[key]
+    return dec
+
+
+def spmm(operand: Operand, x: jax.Array, *,
+         ctx: Optional[DispatchContext] = None) -> jax.Array:
+    """``Y = W @ X`` with ``X: [k, n]`` -- the single matmul entry point.
+
+    Differentiable w.r.t. the operand values and ``x`` on every XLA
+    route (the Pallas routes are forward-only kernels)."""
+    ctx = ctx or current_ctx()
+    _, _, k, _, _ = _normalize(operand)
+    if x.ndim != 2:
+        raise ValueError(f"x must be [k, n], got shape {x.shape}")
+    if x.shape[0] != k:
+        raise ValueError(f"X rows {x.shape[0]} != operand k {k}")
+    dec = decide(operand, int(x.shape[1]), ctx=ctx, x=x)
+    return _run_route(dec.route, operand, x, ctx)
+
+
+def spmm_nt(operand: Operand, x: jax.Array, *,
+            ctx: Optional[DispatchContext] = None) -> jax.Array:
+    """Activation-major form ``x: [..., k] -> [..., m]`` (y = x @ W^T)."""
+    _, m, k, _, _ = _normalize(operand)
+    lead = x.shape[:-1]
+    y = spmm(operand, x.reshape(-1, k).T, ctx=ctx)
+    return y.T.reshape(*lead, m)
+
+
+def matmul(x: jax.Array, w: Operand, *,
+           ctx: Optional[DispatchContext] = None) -> jax.Array:
+    """``y = x @ w`` for activation-major dense layers: ``x: [..., k]``,
+    ``w: [k, n]`` (dense) -- the entry point ``models.layers.dense`` and
+    the serving engine route through."""
+    ctx = ctx or current_ctx()
+    if isinstance(w, (BlockSparseMatrix, DynamicOperand)):
+        raise ValueError("matmul() takes a dense rhs; use spmm_nt for "
+                         "sparse operands")
+    lead = x.shape[:-1]
+    k, n = w.shape
+    x2 = x.reshape(-1, k)
+    # canonical spmm view: operand w^T [n, k] against [k, N] activations
+    dec = decide(jax.ShapeDtypeStruct((n, k), w.dtype), x2.shape[0],
+                 ctx=ctx)
+    if dec.route == "dense_pallas":
+        from repro.kernels.dense_mm import ops as dmm_ops
+        rt = jnp.result_type(x2.dtype, w.dtype)   # match `@` promotion
+        y = dmm_ops.dense_mm(x2.astype(rt), w.astype(rt),
+                             interpret=ctx.interpret)
+    else:
+        y = x2 @ w
+    return y.reshape(*lead, n)
+
+
+def batched_matmul(a: jax.Array, b: jax.Array, *,
+                   ctx: Optional[DispatchContext] = None) -> jax.Array:
+    """Batched dense ``[..., C, D] @ [..., D, F]`` (MoE expert GEMMs).
+    One decision for the per-slice problem; the chosen kernel is vmapped
+    over the leading batch axes."""
+    ctx = ctx or current_ctx()
+    cdim, ddim = a.shape[-2], a.shape[-1]
+    fdim = b.shape[-1]
+    dec = decide(jax.ShapeDtypeStruct((cdim, ddim), a.dtype), fdim, ctx=ctx)
+    rt = jnp.result_type(a.dtype, b.dtype)        # einsum-like promotion
+    if dec.route == "dense_pallas":
+        from repro.kernels.dense_mm import ops as dmm_ops
+        f = lambda aa, bb: dmm_ops.dense_mm(aa, bb, interpret=ctx.interpret)
+        for _ in range(a.ndim - 2):
+            f = jax.vmap(f)
+        return f(a.astype(rt), b.astype(rt))
+    return jnp.matmul(a.astype(rt), b.astype(rt))
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+def explain(operand: Operand, n: int, *,
+            ctx: Optional[DispatchContext] = None) -> dict:
+    """Full decision report for ``operand @ [k, n]`` -- what would run,
+    why, and what it would cost.  Non-caching unless the decision is
+    already cached."""
+    ctx = ctx or current_ctx()
+    kind, m, k, b, density = _normalize(operand)
+    dtype = _dtype_of(operand)
+    key = _cache_key(kind, m, k, n, b, density, dtype, ctx)
+    cached = _decision_cache.get(key)
+    dec = cached or decide(operand, n,
+                           ctx=dataclasses.replace(ctx, cache=False))
+    return {
+        "problem": {"kind": kind, "m": m, "k": k, "n": n, "block_size": b,
+                    "density": round(density, 5),
+                    "density_bucket": _density_bucket(density),
+                    "dtype": jnp.dtype(dtype).name},
+        "mode": ctx.mode,
+        "pallas_admissible": _pallas_ok(ctx),
+        "candidates": {r: dec.est_seconds[r] for r in
+                       sorted(dec.est_seconds, key=dec.est_seconds.get)},
+        "chosen": dec.route,
+        "source": dec.source,
+        "cached": cached is not None,
+        "cache_key": key,
+    }
+
+
+def format_explain(report: dict) -> str:
+    p = report["problem"]
+    lines = [f"dispatch {p['kind']} ({p['m']}x{p['k']}) @ ({p['k']}x"
+             f"{p['n']}) b={p['block_size']} d={p['density']} "
+             f"{p['dtype']} [mode={report['mode']}]"]
+    for route, sec in report["candidates"].items():
+        mark = "->" if route == report["chosen"] else "  "
+        lines.append(f"  {mark} {route:<15} {sec * 1e6:10.2f} us")
+    lines.append(f"   ({report['source']}"
+                 f"{', cached' if report['cached'] else ''})")
+    return "\n".join(lines)

@@ -78,7 +78,13 @@ def encode(dense_w: jax.Array, block_mask: jax.Array, *, block_size: int,
     """
     m, k = dense_w.shape
     b = block_size
+    if m % b or k % b:
+        raise ValueError(f"shape {dense_w.shape} not divisible by "
+                         f"block {b}")
     mb, kb = m // b, k // b
+    if block_mask.shape != (mb, kb):
+        raise ValueError(f"mask shape {block_mask.shape} != grid "
+                         f"{(mb, kb)}")
     flat = block_mask.reshape(-1)
     # stable order: active blocks first, in row-major order
     order = jnp.argsort(~flat, stable=True)
@@ -149,19 +155,22 @@ def _dspmm_bwd(mb, b, res, dy):
 _dspmm.defvjp(_dspmm_fwd, _dspmm_bwd)
 
 
-def dspmm(op: DynamicOperand, x: jax.Array, *, backend: str = "xla",
+def dspmm(op: DynamicOperand, x: jax.Array, *, backend: str = "auto",
           interpret: bool = False) -> jax.Array:
-    """``Y = decode(op) @ X`` with ``X: [k, n]`` -> ``Y: [m, n]``."""
+    """``Y = decode(op) @ X`` with ``X: [k, n]`` -> ``Y: [m, n]``.
+
+    ``backend`` delegates to ``repro.core.dispatch``: "auto" lets the
+    autotune layer choose; "xla"/"pallas" force the corresponding
+    dynamic route (the historical behaviour)."""
     if x.shape[0] != op.shape[1]:
         raise ValueError(f"X rows {x.shape[0]} != k {op.shape[1]}")
-    mb = op.shape[0] // op.block_size
-    if backend == "xla":
-        return _dspmm(op.values, op.row_idx, op.col_idx, x, mb,
-                      op.block_size)
-    if backend == "pallas":
-        from repro.kernels.dsmm import ops as dsmm_ops
-        return dsmm_ops.dsmm(op, x, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
+    from repro.core import dispatch  # local import: dispatch imports us
+    mode = {"auto": "auto", "xla": "dynamic_xla",
+            "pallas": "dynamic_pallas"}.get(backend)
+    if mode is None:
+        raise ValueError(f"unknown backend {backend!r}")
+    ctx = dispatch.DispatchContext(mode=mode, interpret=interpret)
+    return dispatch.spmm(op, x, ctx=ctx)
 
 
 def dspmm_nt(op: DynamicOperand, x: jax.Array, **kw) -> jax.Array:

@@ -21,9 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core import dynamic_sparse as dsp
 from repro.core import masks as masks_lib
-from repro.core import static_sparse as ssp
 from repro.core.bsr import BlockSparseMatrix
 
 
@@ -46,7 +46,7 @@ class SparseLinear:
     pattern: np.ndarray                 # [out/b, in/b] bool (host)
     use_bias: bool = False
     dtype: object = jnp.float32
-    backend: str = "xla"
+    backend: str = "auto"     # dispatch mode ("auto" / route id / family)
 
     def __post_init__(self):
         ob, ib = self.out_features // self.block_size, \
@@ -83,15 +83,15 @@ class SparseLinear:
                                  (self.out_features, self.in_features),
                                  self.block_size)
 
+    def _ctx(self) -> dispatch.DispatchContext:
+        if self.backend in ("xla", "pallas"):    # historical spellings
+            return dispatch.DispatchContext(mode=f"static_{self.backend}")
+        return dispatch.DispatchContext(mode=self.backend)
+
     def apply(self, params, x: jax.Array) -> jax.Array:
-        rows, cols = self._indices()
-        grid = (self.out_features // self.block_size,
-                self.in_features // self.block_size)
-        f = ssp.make_spmm(rows, cols, grid, self.block_size)
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, self.in_features).T
-        y = f(params["values"], x2.astype(params["values"].dtype))
-        y = y.T.reshape(*lead, self.out_features)
+        bsr = self.as_bsr(params)
+        y = dispatch.spmm_nt(bsr, x.astype(params["values"].dtype),
+                             ctx=self._ctx())
         if self.use_bias:
             y = y + params["bias"]
         return y
@@ -120,7 +120,7 @@ class DynamicSparseLinear:
     d_max: float
     use_bias: bool = False
     dtype: object = jnp.float32
-    backend: str = "xla"
+    backend: str = "auto"     # forwarded to dispatch via dspmm
 
     @property
     def nnz_max(self) -> int:

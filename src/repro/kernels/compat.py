@@ -1,0 +1,16 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in
+newer jax releases; the kernels go through this helper so they load on
+both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    return _CompilerParams(**kwargs)

@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
+
 
 def _norm_init(d):
     return {"scale": jnp.ones((d,), jnp.float32)}
@@ -33,7 +35,9 @@ def dense_init(key, d_in, d_out, *, bias: bool = False, dtype=jnp.bfloat16,
 
 
 def dense(params, x):
-    y = x @ params["w"]
+    # routed through the dispatch layer so serving/training pick up the
+    # ambient DispatchContext (dense Pallas kernel on TPU, XLA elsewhere)
+    y = dispatch.matmul(x, params["w"])
     if "b" in params:
         y = y + params["b"]
     return y

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.models.model import LM
 
 
@@ -39,23 +40,33 @@ class Request:
 
 class Engine:
     def __init__(self, lm: LM, params, *, batch: int, max_len: int,
-                 retained: bool = False, sample: str = "greedy"):
+                 retained: bool = False, sample: str = "greedy",
+                 dispatch_ctx: Optional[dispatch.DispatchContext] = None):
         self.lm = lm
         self.params = params
         self.batch = batch
         self.max_len = max_len
         self.retained = retained
+        # every matmul in the traced programs consults this context (the
+        # decode/prefill decision cache is warmed at first trace);
+        # serving is forward-only, so Pallas routes are admissible
+        self.dispatch_ctx = dispatch_ctx or dispatch.DispatchContext(
+            differentiable=False)
         self.caches = lm.init_cache(batch, max_len)
         self.positions = np.zeros((batch,), np.int32)
         self.live: Dict[int, Request] = {}       # slot -> request
         self.free = list(range(batch))
 
-        self._decode = jax.jit(
-            lambda p, t, c, pos: lm.decode_step(p, t, c, pos,
-                                                retained=retained))
-        self._prefill = jax.jit(
-            lambda p, t: lm.prefill(p, t, max_len=max_len),
-            static_argnums=())
+        def decode_fn(p, t, c, pos):
+            with dispatch.use_ctx(self.dispatch_ctx):
+                return lm.decode_step(p, t, c, pos, retained=retained)
+
+        def prefill_fn(p, t):
+            with dispatch.use_ctx(self.dispatch_ctx):
+                return lm.prefill(p, t, max_len=max_len)
+
+        self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn)
 
         def write_slot(caches, row, slot):
             return jax.tree.map(

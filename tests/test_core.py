@@ -1,20 +1,29 @@
 """Core library invariants: BSR container, static partitioner, TP SpMM.
-Property-based (hypothesis) where the invariant is structural."""
+Structural invariants are exercised as seeded parametrize sweeps (no
+hypothesis dependency -- the sweeps are deterministic and CI-friendly)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import masks, partitioner, static_sparse as ssp
 from repro.core.bsr import BlockSparseMatrix
 
 
+def _sweep(seed: int, n: int, *axes):
+    """Deterministic pseudo-random parameter sweep: ``n`` tuples drawn
+    from the cartesian space of ``axes`` (each axis a list of values)."""
+    rng = np.random.RandomState(seed)
+    return [tuple(ax[rng.randint(len(ax))] for ax in axes)
+            for _ in range(n)]
+
+
 # -- BSR ------------------------------------------------------------------------
 
-@given(mb=st.integers(1, 8), kb=st.integers(1, 8),
-       b=st.sampled_from([1, 4, 8, 16]), density=st.floats(0.05, 1.0))
-@settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize(
+    "mb,kb,b,density",
+    _sweep(0, 12, list(range(1, 9)), list(range(1, 9)), [1, 4, 8, 16],
+           [0.05, 0.2, 0.5, 0.8, 1.0]))
 def test_bsr_dense_roundtrip(mb, kb, b, density):
     m, k = mb * b, kb * b
     mask = masks.random_block_mask(m, k, b, density, seed=mb * 7 + kb)
@@ -35,8 +44,10 @@ def test_bsr_block_mask_roundtrip():
 
 # -- static partitioner ------------------------------------------------------------
 
-@given(kb=st.integers(4, 64), q=st.integers(1, 8), seed=st.integers(0, 99))
-@settings(max_examples=40, deadline=None)
+@pytest.mark.parametrize(
+    "kb,q,seed",
+    _sweep(1, 16, list(range(4, 65)), list(range(1, 9)),
+           list(range(100))))
 def test_balanced_splits_cover_and_monotone(kb, q, seed):
     q = min(q, kb)
     mask = masks.random_block_mask(kb * 4, kb * 4, 4, 0.3, seed=seed)
@@ -63,8 +74,8 @@ def test_balanced_beats_even_on_skewed_pattern():
     assert max(loads_bal) < max(loads_even)
 
 
-@given(seed=st.integers(0, 50), q=st.sampled_from([2, 4, 8]))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize(
+    "seed,q", _sweep(2, 9, list(range(51)), [2, 4, 8]))
 def test_shard_blocks_partition_of_blocks(seed, q):
     bsr = BlockSparseMatrix.random(jax.random.PRNGKey(seed), 128, 256, 8,
                                    0.4, pattern_seed=seed)

@@ -1,0 +1,341 @@
+"""Unified dispatch layer (repro.core.dispatch): backend parity against
+the dense oracle, decision-cache behaviour, gradients through ``spmm``,
+and the call-site delegations (sparse layers, dspmm, MoE helper)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch, dynamic_sparse as dsp
+from repro.core.bsr import BlockSparseMatrix
+
+M, K, N, B, DENSITY = 128, 256, 64, 16, 0.25
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.clear_cache()
+    yield
+    dispatch.clear_cache()
+
+
+def _bsr(seed=0, m=M, k=K, b=B, d=DENSITY, dtype=jnp.float32):
+    return BlockSparseMatrix.random(jax.random.PRNGKey(seed), m, k, b, d,
+                                    dtype=dtype, pattern_seed=seed)
+
+
+def _problem(seed=0, dtype=jnp.float32):
+    bsr = _bsr(seed, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100),
+                          (K, N)).astype(dtype)
+    oracle = jnp.asarray(bsr.to_dense()) @ x
+    return bsr, x, oracle
+
+
+# -- backend parity: every selectable route matches the dense oracle ----------
+
+XLA_ROUTES = ["dense_xla", "static_xla", "dynamic_xla"]
+PALLAS_ROUTES = ["dense_pallas", "static_pallas", "dynamic_pallas"]
+
+
+def _operand_for(route, bsr):
+    if route.startswith("dynamic"):
+        return dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 4)
+    if route.startswith("dense"):
+        return jnp.asarray(bsr.to_dense())
+    return bsr
+
+
+@pytest.mark.parametrize("route", XLA_ROUTES)
+def test_route_parity_xla(route):
+    bsr, x, oracle = _problem()
+    ctx = dispatch.DispatchContext(mode=route)
+    y = dispatch.spmm(_operand_for(route, bsr), x, ctx=ctx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("route", PALLAS_ROUTES)
+def test_route_parity_pallas_interpret(route):
+    bsr, x, oracle = _problem()
+    ctx = dispatch.DispatchContext(mode=route, interpret=True)
+    y = dispatch.spmm(_operand_for(route, bsr), x, ctx=ctx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["dense", "static", "dynamic"])
+def test_auto_parity(kind):
+    """Whatever auto picks, the numbers must match the oracle."""
+    bsr, x, oracle = _problem()
+    op = {"dense": jnp.asarray(bsr.to_dense()), "static": bsr,
+          "dynamic": dsp.encode_from_bsr(bsr,
+                                         nnz_max=bsr.nnz_blocks)}[kind]
+    y = dispatch.spmm(op, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+    dec = dispatch.decide(op, N)
+    assert dec.route.split("_")[0] in dispatch._ADMISSIBLE[kind]
+
+
+def test_auto_under_jit():
+    bsr, x, oracle = _problem()
+    f = jax.jit(lambda v, xx: dispatch.spmm(bsr.with_values(v), xx))
+    y = f(jnp.asarray(bsr.values), x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_nt_matches_transpose_form():
+    bsr, x, _ = _problem()
+    xa = jax.random.normal(jax.random.PRNGKey(7), (3, 5, K))
+    y = dispatch.spmm_nt(bsr, xa)
+    want = xa.reshape(-1, K) @ jnp.asarray(bsr.to_dense()).T
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, M)),
+                               np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_and_batched_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    np.testing.assert_allclose(np.asarray(dispatch.matmul(x, w)),
+                               np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+    a = jax.random.normal(jax.random.PRNGKey(2), (3, 8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(3), (3, 16, 24))
+    np.testing.assert_allclose(np.asarray(dispatch.batched_matmul(a, b)),
+                               np.asarray(jnp.matmul(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- decision cache -----------------------------------------------------------
+
+def test_decision_cache_hit_and_stability():
+    bsr, x, _ = _problem()
+    d1 = dispatch.decide(bsr, N)
+    assert dispatch.cache_stats()["entries"] == 1
+    # same logical problem, different values -> same cached decision obj
+    bsr2 = _bsr(seed=5)
+    d2 = dispatch.decide(bsr2, N)
+    assert dispatch.cache_stats()["entries"] == 1
+    assert d2 is d1 and d2.route == d1.route
+    # different n -> new entry
+    dispatch.decide(bsr, 2 * N)
+    assert dispatch.cache_stats()["entries"] == 2
+
+
+def test_density_bucket_stabilizes_key():
+    """nnz jitter within a power-of-two bucket must not split the key."""
+    ctx = dispatch.DispatchContext()
+    a = dispatch._cache_key("static", M, K, N, B, 0.24, jnp.float32, ctx)
+    b = dispatch._cache_key("static", M, K, N, B, 0.26, jnp.float32, ctx)
+    assert a == b
+    c = dispatch._cache_key("static", M, K, N, B, 0.06, jnp.float32, ctx)
+    assert c != a
+
+
+def test_cache_key_includes_context():
+    """A verdict from one context must not leak into an incompatible
+    one (interpret / differentiable / measure change what runs)."""
+    base = dispatch.DispatchContext()
+    for other in (dispatch.DispatchContext(interpret=True),
+                  dispatch.DispatchContext(differentiable=False),
+                  dispatch.DispatchContext(measure=True)):
+        assert dispatch._cache_key(
+            "static", M, K, N, B, 0.25, jnp.float32, base) != \
+            dispatch._cache_key(
+                "static", M, K, N, B, 0.25, jnp.float32, other)
+
+
+def test_differentiable_excludes_pallas_from_auto():
+    """Pallas kernels are forward-only: auto selection must never pick
+    them for a differentiable caller, even when explicitly allowed."""
+    bsr, x, _ = _problem()
+    grad_ctx = dispatch.DispatchContext(allow_pallas=True)
+    assert all(r.endswith("_xla") for r in
+               dispatch.decide(bsr, N, ctx=grad_ctx).est_seconds)
+    fwd_ctx = dispatch.DispatchContext(allow_pallas=True,
+                                       differentiable=False)
+    assert any(r.endswith("_pallas") for r in
+               dispatch.decide(bsr, N, ctx=fwd_ctx).est_seconds)
+
+
+def test_interpret_does_not_admit_pallas_to_auto():
+    """interpret=True is a testing affordance for forced routes; it
+    must not route production auto traffic through the interpreter."""
+    bsr, x, _ = _problem()
+    ctx = dispatch.DispatchContext(interpret=True, differentiable=False)
+    if jax.default_backend() != "tpu":
+        assert all(r.endswith("_xla") for r in
+                   dispatch.decide(bsr, N, ctx=ctx).est_seconds)
+
+
+def test_promotion_semantics_match_einsum():
+    """Every route must follow jnp promotion of (operand, x) dtypes."""
+    bsr = _bsr(dtype=jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(3), (K, N))  # fp32
+    want = jnp.result_type(jnp.bfloat16, x.dtype)
+    for mode in ("dense_xla", "static_xla", "dynamic_xla"):
+        op = _operand_for(mode, bsr)
+        y = dispatch.spmm(op, x, ctx=dispatch.DispatchContext(mode=mode))
+        assert y.dtype == want, (mode, y.dtype)
+    a = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 8),
+                          dtype=jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 4)
+                          ).astype(jnp.bfloat16)
+    assert dispatch.batched_matmul(a, b).dtype == jnp.result_type(
+        a.dtype, b.dtype)
+
+
+def test_cache_respects_mode_and_dtype():
+    bsr, x, _ = _problem()
+    dispatch.decide(bsr, N)
+    dispatch.decide(bsr, N,
+                    ctx=dispatch.DispatchContext(mode="static_xla"))
+    dispatch.decide(_bsr(dtype=jnp.bfloat16), N)
+    assert dispatch.cache_stats()["entries"] == 3
+
+
+def test_measured_autotune_memoizes():
+    bsr, x, _ = _problem()
+    ctx = dispatch.DispatchContext(measure=True)
+    d1 = dispatch.decide(bsr, N, ctx=ctx, x=x)
+    assert d1.source == "measured"
+    d2 = dispatch.decide(bsr, N, ctx=ctx, x=x)
+    assert d2 is d1                      # cache hit, no re-measurement
+
+
+def test_measure_skips_unrunnable_pallas_candidates():
+    """measure=True with allow_pallas=True off-TPU must not execute
+    Pallas natively; it measures the runnable routes and keeps the
+    analytic estimates for the rest (regression: used to crash)."""
+    bsr, x, _ = _problem()
+    ctx = dispatch.DispatchContext(measure=True, allow_pallas=True,
+                                   differentiable=False)
+    dec = dispatch.decide(bsr, N, ctx=ctx, x=x)
+    if jax.default_backend() != "tpu":
+        assert dec.source == "measured"
+        assert dec.route.endswith("_xla")
+        assert "static_pallas" in dec.est_seconds   # analytic, reported
+
+
+def test_measure_skipped_under_trace():
+    bsr, x, _ = _problem()
+    ctx = dispatch.DispatchContext(measure=True, cache=False)
+
+    @jax.jit
+    def f(xx):
+        dec = dispatch.decide(bsr, N, ctx=ctx, x=xx)
+        assert dec.source == "analytic"   # tracer input -> no wall clock
+        return dispatch.spmm(bsr, xx, ctx=ctx)
+
+    f(x)
+
+
+def test_use_ctx_ambient():
+    bsr, x, oracle = _problem()
+    with dispatch.use_ctx(dispatch.DispatchContext(mode="static_xla")):
+        assert dispatch.current_ctx().mode == "static_xla"
+        y = dispatch.spmm(bsr, x)
+    assert dispatch.current_ctx().mode == "auto"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_invalid_mode_and_route_rejected():
+    with pytest.raises(ValueError):
+        dispatch.DispatchContext(mode="nope")
+    bsr, x, _ = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    with pytest.raises(ValueError):   # dynamic operand has no static route
+        dispatch.spmm(op, x,
+                      ctx=dispatch.DispatchContext(mode="static_xla"))
+    dense = jnp.asarray(bsr.to_dense())
+    with pytest.raises(ValueError):
+        dispatch.spmm(dense, x,
+                      ctx=dispatch.DispatchContext(mode="dynamic_xla"))
+
+
+# -- gradients through the dispatch layer -------------------------------------
+
+@pytest.mark.parametrize("mode", ["auto", "static_xla", "dense_xla"])
+def test_grad_static_matches_dense(mode):
+    bsr, x, _ = _problem()
+    ctx = dispatch.DispatchContext(mode=mode)
+
+    def loss_sparse(values, xx):
+        return (dispatch.spmm(bsr.with_values(values), xx, ctx=ctx) ** 2
+                ).sum()
+
+    def loss_dense(values, xx):
+        return ((bsr.with_values(values).to_dense() @ xx) ** 2).sum()
+
+    gv_s, gx_s = jax.grad(loss_sparse, argnums=(0, 1))(
+        jnp.asarray(bsr.values), x)
+    gv_d, gx_d = jax.grad(loss_dense, argnums=(0, 1))(
+        jnp.asarray(bsr.values), x)
+    np.testing.assert_allclose(np.asarray(gv_s), np.asarray(gv_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx_s), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["auto", "dynamic_xla"])
+def test_grad_dynamic_matches_dense(mode):
+    bsr, x, _ = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    ctx = dispatch.DispatchContext(mode=mode)
+
+    def loss_sparse(values, xx):
+        o = dsp.DynamicOperand(values, op.row_idx, op.col_idx, op.nnz,
+                               op.shape, op.block_size)
+        return (dispatch.spmm(o, xx, ctx=ctx) ** 2).sum()
+
+    def loss_dense(values, xx):
+        o = dsp.DynamicOperand(values, op.row_idx, op.col_idx, op.nnz,
+                               op.shape, op.block_size)
+        return ((o.to_dense() @ xx) ** 2).sum()
+
+    gv_s, gx_s = jax.grad(loss_sparse, argnums=(0, 1))(op.values, x)
+    gv_d, gx_d = jax.grad(loss_dense, argnums=(0, 1))(op.values, x)
+    np.testing.assert_allclose(np.asarray(gv_s), np.asarray(gv_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx_s), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- call-site delegation ------------------------------------------------------
+
+def test_sparse_linear_backends_agree():
+    from repro.core.sparse_layers import SparseLinear
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    outs = []
+    for backend in ("auto", "static_xla", "dense_xla", "xla"):
+        layer = SparseLinear.random_pattern(None, 64, 128, 16, 0.5,
+                                            seed=0, backend=backend)
+        params = layer.init(jax.random.PRNGKey(0))
+        outs.append(np.asarray(layer.apply(params, x)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+
+def test_dspmm_backend_delegates():
+    bsr, x, oracle = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 2)
+    for backend in ("auto", "xla"):
+        y = dsp.dspmm(op, x, backend=backend)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(oracle),
+                                   rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        dsp.dspmm(op, x, backend="bogus")
+
+
+def test_explain_report():
+    bsr, x, _ = _problem()
+    rep = dispatch.explain(bsr, N)
+    assert rep["problem"]["kind"] == "static"
+    assert rep["chosen"] in rep["candidates"]
+    assert set(rep["candidates"]) >= {"static_xla", "dense_xla"}
+    assert rep["cached"] is False and rep["source"] == "analytic"
+    dispatch.decide(bsr, N)
+    assert dispatch.explain(bsr, N)["cached"] is True
+    assert "dispatch" in dispatch.format_explain(rep)

@@ -1,9 +1,10 @@
 """Dynamic sparsity (paper §3.3): encoder, capacity bound, planner."""
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import dynamic_sparse as dsp, masks, planner
 from repro.core.bsr import BlockSparseMatrix
@@ -69,12 +70,11 @@ def test_dspmm_grad():
 
 # -- planner -----------------------------------------------------------------------
 
-@given(mkn=st.sampled_from([(1024, 1024, 256), (4096, 4096, 512),
-                            (2048, 512, 64)]),
-       d_max=st.sampled_from([1/32, 1/16, 1/4]),
-       b=st.sampled_from([4, 8, 16]),
-       units=st.sampled_from([4, 16, 64]))
-@settings(max_examples=30, deadline=None)
+@pytest.mark.parametrize(
+    "mkn,d_max,b,units",
+    list(itertools.product(
+        [(1024, 1024, 256), (4096, 4096, 512), (2048, 512, 64)],
+        [1 / 32, 1 / 16, 1 / 4], [4, 8, 16], [4, 64])))
 def test_planner_respects_budget(mkn, d_max, b, units):
     m, k, n = mkn
     plan = planner.plan_dynamic(m, k, n, d_max=d_max, block_size=b,

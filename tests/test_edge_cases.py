@@ -1,0 +1,118 @@
+"""Edge-case regressions for the sparse containers and entry points:
+empty patterns, capacity overflow, non-divisible shapes, and
+static/dynamic representation agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch, dynamic_sparse as dsp, masks, \
+    static_sparse as ssp
+from repro.core.bsr import BlockSparseMatrix
+
+
+# -- empty BSR (0 blocks) ------------------------------------------------------
+
+def test_empty_bsr_roundtrip_and_spmm():
+    mask = np.zeros((4, 8), bool)
+    bsr = BlockSparseMatrix.from_mask(mask, 16)
+    assert bsr.nnz_blocks == 0 and bsr.density == 0.0
+    assert not np.asarray(bsr.to_dense()).any()
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 8))
+    for f in (lambda: ssp.spmm(bsr, x), lambda: dispatch.spmm(bsr, x)):
+        y = f()
+        assert y.shape == (64, 8)
+        assert not np.asarray(y).any()
+
+
+def test_empty_bsr_grad_is_zero_shaped():
+    mask = np.zeros((2, 2), bool)
+    bsr = BlockSparseMatrix.from_mask(mask, 8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 4))
+    g = jax.grad(lambda v: (dispatch.spmm(bsr.with_values(v), x) ** 2
+                            ).sum())(jnp.asarray(bsr.values))
+    assert g.shape == (0, 8, 8)
+
+
+# -- encode overflow beyond nnz_max (drop semantics) ---------------------------
+
+def test_encode_overflow_keeps_row_major_prefix():
+    w = jnp.arange(64.0 * 64).reshape(64, 64)
+    mask = jnp.ones((8, 8), bool)
+    op = dsp.encode(w, mask, block_size=8, nnz_max=10)
+    assert op.capacity == 10 and int(op.nnz) == 10
+    dense = np.asarray(op.to_dense())
+    blocked = np.asarray(w).reshape(8, 8, 8, 8).transpose(0, 2, 1, 3)
+    kept = dense.reshape(8, 8, 8, 8).transpose(0, 2, 1, 3)
+    flat_src = blocked.reshape(64, 8, 8)
+    flat_got = kept.reshape(64, 8, 8)
+    np.testing.assert_allclose(flat_got[:10], flat_src[:10])   # kept as-is
+    assert not flat_got[10:].any()                             # dropped
+
+
+def test_encode_overflow_matmul_matches_truncated_oracle():
+    """Y from an overflowed operand equals the dense product of the kept
+    (row-major prefix) blocks only."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    mask = jnp.ones((8, 8), bool)
+    op = dsp.encode(w, mask, block_size=8, nnz_max=12)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    want = jnp.asarray(op.to_dense()) @ x
+    got = dispatch.spmm(op, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_encode_from_bsr_overflow_raises():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 64, 64, 8, 0.5)
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks - 1)
+
+
+# -- non-divisible shapes raise cleanly ---------------------------------------
+
+def test_from_dense_non_divisible_raises():
+    with pytest.raises(ValueError, match="not divisible"):
+        BlockSparseMatrix.from_dense(jnp.zeros((60, 64)), 16)
+    with pytest.raises(ValueError, match="not divisible"):
+        BlockSparseMatrix.from_dense(jnp.zeros((64, 60)), 16)
+
+
+def test_encode_non_divisible_raises():
+    with pytest.raises(ValueError, match="not divisible"):
+        dsp.encode(jnp.zeros((60, 64)), jnp.ones((4, 4), bool),
+                   block_size=16, nnz_max=4)
+
+
+def test_spmm_shape_mismatch_raises():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 64, 64, 8, 0.5)
+    x_bad = jnp.zeros((48, 4))
+    with pytest.raises(ValueError):
+        ssp.spmm(bsr, x_bad)
+    with pytest.raises(ValueError):
+        dispatch.spmm(bsr, x_bad)
+    with pytest.raises(ValueError):
+        dispatch.spmm(bsr, jnp.zeros((64,)))       # not [k, n]
+    with pytest.raises(ValueError):
+        dispatch.spmm(jnp.zeros((2, 3, 4)), x_bad)  # operand not 2-D
+
+
+# -- static/dynamic representation agreement ----------------------------------
+
+def test_dynamic_operand_to_dense_matches_bsr():
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(0), 128, 96, 8, 0.3)
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 7)
+    np.testing.assert_allclose(np.asarray(op.to_dense()),
+                               np.asarray(bsr.to_dense()), rtol=1e-6)
+
+
+def test_encode_matches_masked_dense_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 96))
+    mask = masks.random_block_mask(64, 96, 8, 0.4, seed=3)
+    bsr = BlockSparseMatrix.from_dense(
+        np.asarray(w) * np.repeat(np.repeat(mask, 8, 0), 8, 1), 8,
+        keep_mask=mask)
+    op = dsp.encode(w, jnp.asarray(mask), block_size=8,
+                    nnz_max=int(mask.sum()))
+    np.testing.assert_allclose(np.asarray(op.to_dense()),
+                               np.asarray(bsr.to_dense()), rtol=1e-6)

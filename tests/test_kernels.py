@@ -20,6 +20,10 @@ from repro.kernels.gmm import ops as gmm_ops
 from repro.kernels.gmm.ref import gmm_ref
 
 
+# interpret-mode Pallas kernel sweeps: excluded from the fast tier-1 run (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 def _tol(dtype):
     # fp32 accumulation-order differences grow with K; bf16 inputs coarser
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
@@ -97,7 +101,7 @@ def test_dense_mm(m, k, n):
     b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
     got = dmm_ops.dense_mm(a, b, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(dense_mm_ref(a, b)),
-                               rtol=1e-5, atol=1e-5)
+                               rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("pattern", ["causal_local", "banded", "full"])

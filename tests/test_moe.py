@@ -10,6 +10,12 @@ from repro.models import moe as moe_lib
 from repro.models.moe import moe_apply, moe_init
 
 
+import pytest
+
+# model-level MoE dispatch: excluded from the fast tier-1 run (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 def _cfg(**over):
     cfg = qwen3_moe_30b_a3b.make_smoke_config()
     if over:

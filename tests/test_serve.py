@@ -8,6 +8,12 @@ from repro.models.model import LM
 from repro.serve import Engine, Request
 
 
+import pytest
+
+# model-level serving engine: excluded from the fast tier-1 run (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 def _setup():
     cfg = configs.smoke("llama3_2_1b")
     lm = LM(cfg)

@@ -19,8 +19,12 @@ def mesh():
 
 
 def _amesh(shape, names=("data", "model")):
-    """Abstract mesh: rule tests need axis sizes, not real devices."""
-    return AbstractMesh(shape, names)
+    """Abstract mesh: rule tests need axis sizes, not real devices.
+    jax < 0.5 takes ((name, size), ...); newer takes (sizes, names)."""
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
 
 
 def _sizes(mesh):

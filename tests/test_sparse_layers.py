@@ -4,7 +4,7 @@ paper's technique."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import masks
 from repro.core.sparse_layers import (DynamicSparseLinear, SparseFFN,
@@ -21,9 +21,8 @@ def test_sparse_linear_matches_masked_dense():
     np.testing.assert_allclose(np.asarray(y), want, rtol=1e-4, atol=1e-4)
 
 
-@given(density=st.sampled_from([0.125, 0.25, 0.5]),
-       b=st.sampled_from([8, 16]))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize("density", [0.125, 0.25, 0.5])
+@pytest.mark.parametrize("b", [8, 16])
 def test_sparse_linear_density(density, b):
     layer = SparseLinear.random_pattern(None, 128, 128, b, density, seed=1)
     assert abs(layer.density - density) < 0.05

@@ -7,6 +7,10 @@ import pytest
 from repro.models.ssm import ssd_scan
 
 
+# model-level SSM blocks: excluded from the fast tier-1 run (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 def _naive_recurrence(x, dt, A, B, C):
     """Token-by-token SSM: h = h*exp(dt*A) + dt*B x; y = C.h"""
     b, s, h, p = x.shape

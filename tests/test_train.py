@@ -16,6 +16,10 @@ from repro.sharding import rules
 from repro.train.step import TrainHParams, init_train_state, make_train_step
 
 
+# model-level training loop: excluded from the fast tier-1 run (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 def _tiny_cfg():
     return configs.smoke("llama3_2_1b")
 

@@ -100,6 +100,18 @@ def main():
           f"collective {roof['t_collective']*1e3:.1f}ms -> "
           f"{roof['dominant']}-bound, frac {roof.get('roofline_frac', 0):.4f}")
 
+    # dispatch report: what the autotune layer would run for this cell's
+    # FFN matmul (per-device shapes on the production mesh)
+    import jax.numpy as jnp
+    from repro.core import dispatch
+    tokens = meta.get("tokens_device") or configs.SHAPES[shape].get("seq", 0)
+    if cfg.d_ff and tokens:
+        dctx = dispatch.DispatchContext(allow_pallas=True,
+                                        differentiable=False)
+        probe = jax.ShapeDtypeStruct((cfg.d_ff, cfg.d_model), jnp.bfloat16)
+        print(dispatch.format_explain(
+            dispatch.explain(probe, int(tokens), ctx=dctx)))
+
 
 if __name__ == "__main__":
     main()
