@@ -35,6 +35,8 @@ CLAIMS = {
     "occupancy": "TPU-specific (DESIGN.md S2): clustered patterns pack "
                  "into near-full MXU tiles, scattered ones do not",
     "cpu_walltime": "hardware-agnostic ordering check on real timers",
+    "dispatch": "paper Table 3 as runtime plans: static routes win at "
+                "low density / large blocks, dense at high density",
 }
 
 
@@ -87,6 +89,12 @@ def _check(fig, recs):
         return by[(16, True)] > 5 * by[(16, False)], \
             f"b=16 occupancy clustered {by[(16, True)]} vs " \
             f"scattered {by[(16, False)]}"
+    if fig == "dispatch":
+        low = [r["chosen"] for r in recs if r["kind"] == "static"
+               and r["density"] <= 1 / 16 and r["b"] >= 16]
+        ok = bool(low) and any(c.startswith("static") for c in low)
+        return ok, (f"{len(recs)} planned decisions; low-density b>=16 "
+                    f"static routes: {sorted(set(low))}")
     return True, ""
 
 
@@ -94,13 +102,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-walltime", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke grid for experiments that support it "
+                         "(currently: dispatch)")
+    ap.add_argument("--out", default=None,
+                    help="also write the records to this JSON path "
+                         "(e.g. BENCH_dispatch.json for the CI artifact)")
     args = ap.parse_args()
 
     all_recs = {}
     for fig, fn in suite.ALL.items():
         if args.only and fig != args.only:
             continue
-        all_recs[fig] = fn()
+        if fig == "dispatch" and args.tiny:
+            all_recs[fig] = suite.dispatch_decisions(tiny=True)
+        else:
+            all_recs[fig] = fn()
     if not args.only and not args.skip_walltime:
         all_recs["cpu_walltime"] = bench_walltime.run()
     elif args.only == "cpu_walltime":
@@ -109,6 +126,10 @@ def main():
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "results.json"), "w") as f:
         json.dump(all_recs, f, indent=1)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(all_recs, f, indent=1)
 
     failures = 0
     for fig, recs in all_recs.items():

@@ -214,23 +214,42 @@ def fig7_speedup_grid():
 
 # -- dispatch: the Table-3 crossovers as runtime decisions --------------------------------
 
-def dispatch_decisions():
-    """Ask the autotune layer what it would *run* across the Table 3 /
+def dispatch_decisions(tiny: bool = False):
+    """Ask the plan-first API what it would *run* across the Table 3 /
     Fig 3a grid and record the chosen route + per-candidate estimates.
     This is the executable form of the paper's static/dynamic/dense
-    crossover table."""
+    crossover table.  ``tiny=True`` is the CI benchmark-smoke grid
+    (seconds, not minutes) that seeds BENCH_dispatch.json.
+    """
+    from repro import sparse
     recs = []
-    ctx = dispatch.DispatchContext(allow_pallas=True, differentiable=False)
+    ctx = sparse.PlanContext(allow_pallas=True, differentiable=False)
     key = jax.random.PRNGKey(0)
-    for m in (1024, 4096):
+    ms = (1024,) if tiny else (1024, 4096)
+    ds = (1 / 4, 1 / 16) if tiny else (1 / 4, 1 / 16, 1 / 32)
+    ns = (256,) if tiny else (256, 4096)
+    for m in ms:
         for b in (4, 16):
-            for d in (1 / 4, 1 / 16, 1 / 32):
+            for d in ds:
                 bsr = BlockSparseMatrix.random(key, m, m, b, d)
-                for n in (256, 4096):
-                    rep = dispatch.explain(bsr, n, ctx=ctx)
+                for n in ns:
+                    # static pattern AND its dynamic encoding: both sides
+                    # of the paper's static-vs-dynamic crossover
+                    rep = sparse.plan(bsr, n, ctx=ctx).explain()
                     recs.append(dict(
                         fig="dispatch", m=m, b=b, density=d, n=n,
-                        chosen=rep["chosen"],
+                        kind="static", chosen=rep["chosen"],
+                        source=rep["source"],
+                        candidates={r: round(s * 1e6, 3) for r, s in
+                                    rep["candidates"].items()}))
+                    spec = sparse.OpSpec(kind="dynamic", m=m, k=m, n=n,
+                                         block_size=b, density=d,
+                                         dtype="float32")
+                    rep = sparse.plan(spec, ctx=ctx).explain()
+                    recs.append(dict(
+                        fig="dispatch", m=m, b=b, density=d, n=n,
+                        kind="dynamic", chosen=rep["chosen"],
+                        source=rep["source"],
                         candidates={r: round(s * 1e6, 3) for r, s in
                                     rep["candidates"].items()}))
     return recs

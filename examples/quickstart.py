@@ -64,15 +64,23 @@ def main():
     y_pal = bsmm_ops.bsmm(w, x, interpret=True)
     print(f"  bsmm kernel max err {float(jnp.abs(y_pal - y_ref).max()):.2e}")
 
-    print("== 6. unified dispatch: one entry point, autotuned (Table 3) ==")
-    y_auto = dispatch.spmm(w, x)             # routed + memoized decision
-    print(f"  dispatch.spmm max err {float(jnp.abs(y_auto - y_ref).max()):.2e}")
-    print("  " + dispatch.format_explain(
-        dispatch.explain(w, n)).replace("\n", "\n  "))
-    y_dauto = dispatch.spmm(op, x)           # same entry, dynamic operand
-    print(f"  dynamic operand via dispatch max err "
+    print("== 6. plan-first API: plan once, execute forever (Table 3) ==")
+    from repro import sparse
+    plan = sparse.plan(w, n)                 # phase 1: ALL one-time work
+    y_auto = plan(w.values, x)               # phase 2: zero-decision call
+    print(f"  sparse.plan(...)(values, x) max err "
+          f"{float(jnp.abs(y_auto - y_ref).max()):.2e}")
+    print("  " + sparse.format_plan(plan).replace("\n", "\n  "))
+    y_dauto = sparse.plan(op, n).apply(op, x)   # same API, dynamic operand
+    stats = sparse.cache_stats()
+    print(f"  dynamic operand via plan max err "
           f"{float(jnp.abs(y_dauto - y_ref).max()):.2e}; "
-          f"decision cache: {dispatch.cache_stats()['entries']} entries")
+          f"plan cache: {stats['plan_entries']} plans, "
+          f"{stats['plan_hits']} hits")
+    y_shim = dispatch.spmm(w, x)             # deprecation shim, same plan
+    print(f"  legacy dispatch.spmm shim max err "
+          f"{float(jnp.abs(y_shim - y_ref).max()):.2e} "
+          f"(now {sparse.cache_stats()['plan_hits']} plan-cache hits)")
 
     print("== 7. sparse layers: the technique as a model feature ==")
     from repro.core.sparse_layers import SparseFFN

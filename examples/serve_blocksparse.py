@@ -24,6 +24,8 @@ def main():
 
     print("== continuous batching: 6 requests through 2 slots ==")
     eng = Engine(lm, params, batch=2, max_len=96)
+    print(f"  plan-first startup: {eng.plan_stats['plans_built']} matmul "
+          f"plans built before the first request (decode program)")
     reqs = [Request(uid=i,
                     prompt=np.random.default_rng(i).integers(
                         0, cfg.vocab_size, size=8 + 4 * i),

@@ -3,10 +3,13 @@
 Public surface:
 
 * ``BlockSparseMatrix``        -- BSR container (static or dynamic pattern)
-* ``dispatch.spmm(_nt)``       -- THE matmul entry point: routed + autotuned
-                                  across dense / static / dynamic backends
-* ``static_sparse.spmm(_nt)``  -- compile-time-pattern SpMM (paper §3.2)
-* ``dynamic_sparse.dspmm(_nt)``-- runtime-pattern SpMM with d_max capacity (§3.3)
+* ``repro.sparse``             -- THE public matmul API (plan-first:
+                                  ``plan()`` once, execute decision-free;
+                                  persistent autotune -- see docs/api.md)
+* ``dispatch``                 -- route vocabulary + decision engine
+                                  (``spmm`` etc. are plan-backed shims)
+* ``static_sparse.spmm(_nt)``  -- compile-time-pattern SpMM (paper §3.2, shim)
+* ``dynamic_sparse.dspmm(_nt)``-- runtime-pattern SpMM with d_max capacity (§3.3, shim)
 * ``partitioner`` / ``planner``-- compile-time work distribution (§3.2/§3.3)
 * ``tp``                       -- the partitioning lifted to the mesh
 * ``sparse_layers``            -- SparseLinear / SparseFFN / DynamicSparseLinear

@@ -1,10 +1,17 @@
-"""Unified sparse-matmul dispatch + autotune (PopSparse §3, Table 3).
+"""Sparse-matmul route vocabulary + decision engine (PopSparse §3,
+Table 3).
 
 The paper's central claim is that the *right execution strategy* per
 (shape, block size, density, dtype) -- static pre-planned vs dynamic
 bucketed vs plain dense -- is what turns sparsity into real speedups.
-This module is the runtime component that makes that choice.  One entry
-point:
+This module owns that choice: the route ids, the analytic cost model
+hookup, measured autotune, and the process-level decision cache.
+
+NOTE: the *public* API is now plan-first -- ``repro.sparse`` (see
+docs/api.md) runs the decision once per logical problem, bakes it into
+a frozen ``MatmulPlan``, and persists verdicts to disk.  The entry
+points below survive as thin deprecation shims that build-and-call a
+plan:
 
     spmm(operand, x, *, ctx=None) -> y            # Y = W @ X,  X: [k, n]
 
@@ -23,6 +30,7 @@ Routes (the execution strategies of Table 3, plus the TPU dense kernel):
     static_pallas   kernels/bsmm tile-packed kernel (compile-time metadata)
     dynamic_xla     dynamic_sparse._dspmm scatter-add formulation
     dynamic_pallas  kernels/dsmm slot-walk kernel (runtime metadata)
+    dynamic_grouped kernels/gmm device-side tile packing -> full-tile walk
 
 The decision is autotuned per *logical problem*, not per call: first the
 analytic TPU cost model (``benchmarks.cost_model``, the same one the
@@ -61,7 +69,7 @@ from repro.core import static_sparse as _ssp
 Operand = Union[jax.Array, np.ndarray, BlockSparseMatrix, DynamicOperand]
 
 ROUTES = ("dense_xla", "dense_pallas", "static_xla", "static_pallas",
-          "dynamic_xla", "dynamic_pallas")
+          "dynamic_xla", "dynamic_pallas", "dynamic_grouped")
 MODES = ("auto", "dense", "static", "dynamic") + ROUTES
 
 
@@ -239,6 +247,13 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
     db = cm.B32 if fp32 else cm.B16
     if route.startswith("dense"):
         t = cm.dense_time(m, k, n, dtype_bytes=db)
+    elif route == "dynamic_grouped":
+        # expected-occupancy stand-in for the device-side tile packing
+        tiles = _expected_tiles(m, k, b, density)
+        pk = type("_Pk", (), dict(
+            num_tiles=tiles, tm=min(128, m), tk=min(128, k),
+            _nnz_area=int(m * k * density), shape=(m, k)))
+        t = cm.dsmm_grouped_time(pk, n, dtype_bytes=db)
     elif route.startswith("static"):
         tiles = _expected_tiles(m, k, b, density)
         tm = min(128, m)
@@ -313,6 +328,11 @@ def _candidates(kind: str, ctx: DispatchContext) -> Tuple[str, ...]:
         cands.append(f"{f}_xla")
         if _pallas_ok(ctx):
             cands.append(f"{f}_pallas")
+            if f == "dynamic":
+                # device-side tile packing (kernels/gmm) -- runs the
+                # full-tile Pallas walk, so it is gated like the other
+                # Pallas routes
+                cands.append("dynamic_grouped")
     return tuple(cands)
 
 
@@ -341,7 +361,7 @@ def _run_route(route: str, operand: Operand, x: jax.Array,
     if route == "static_pallas":
         from repro.kernels.bsmm import ops as bsmm_ops
         return bsmm_ops.bsmm(operand, x, interpret=ctx.interpret)
-    if route in ("dynamic_xla", "dynamic_pallas"):
+    if route in ("dynamic_xla", "dynamic_pallas", "dynamic_grouped"):
         op = operand
         if isinstance(op, BlockSparseMatrix):   # device-resident indices
             op = DynamicOperand(
@@ -353,6 +373,9 @@ def _run_route(route: str, operand: Operand, x: jax.Array,
             mb = op.shape[0] // op.block_size
             return _dspmm(op.values, op.row_idx, op.col_idx, x, mb,
                           op.block_size)
+        if route == "dynamic_grouped":
+            from repro.kernels.gmm import ops as gmm_ops
+            return gmm_ops.grouped_spmm(op, x, interpret=ctx.interpret)
         from repro.kernels.dsmm import ops as dsmm_ops
         return dsmm_ops.dsmm(op, x, interpret=ctx.interpret)
     raise ValueError(f"unknown route {route!r}")
@@ -438,7 +461,12 @@ def decide(operand: Operand, n: int, *,
 
 def spmm(operand: Operand, x: jax.Array, *,
          ctx: Optional[DispatchContext] = None) -> jax.Array:
-    """``Y = W @ X`` with ``X: [k, n]`` -- the single matmul entry point.
+    """``Y = W @ X`` with ``X: [k, n]``.
+
+    DEPRECATED entry point: prefer the plan-first API --
+    ``repro.sparse.plan(operand, n)`` once, then call the plan.  This
+    shim builds (or fetches from the plan cache) that plan and calls it,
+    so behaviour and numerics match the plan path exactly.
 
     Differentiable w.r.t. the operand values and ``x`` on every XLA
     route (the Pallas routes are forward-only kernels)."""
@@ -448,8 +476,10 @@ def spmm(operand: Operand, x: jax.Array, *,
         raise ValueError(f"x must be [k, n], got shape {x.shape}")
     if x.shape[0] != k:
         raise ValueError(f"X rows {x.shape[0]} != operand k {k}")
-    dec = decide(operand, int(x.shape[1]), ctx=ctx, x=x)
-    return _run_route(dec.route, operand, x, ctx)
+    from repro import sparse as sparse_api
+    p = sparse_api.plan(operand, int(x.shape[1]), x=x,
+                        ctx=sparse_api.PlanContext.from_dispatch(ctx))
+    return p.apply(operand, x)
 
 
 def spmm_nt(operand: Operand, x: jax.Array, *,
@@ -464,45 +494,23 @@ def spmm_nt(operand: Operand, x: jax.Array, *,
 def matmul(x: jax.Array, w: Operand, *,
            ctx: Optional[DispatchContext] = None) -> jax.Array:
     """``y = x @ w`` for activation-major dense layers: ``x: [..., k]``,
-    ``w: [k, n]`` (dense) -- the entry point ``models.layers.dense`` and
-    the serving engine route through."""
+    ``w: [k, n]`` (dense).  DEPRECATED shim over
+    ``repro.sparse.matmul`` (plan cached per logical shape)."""
     ctx = ctx or current_ctx()
-    if isinstance(w, (BlockSparseMatrix, DynamicOperand)):
-        raise ValueError("matmul() takes a dense rhs; use spmm_nt for "
-                         "sparse operands")
-    lead = x.shape[:-1]
-    k, n = w.shape
-    x2 = x.reshape(-1, k)
-    # canonical spmm view: operand w^T [n, k] against [k, N] activations
-    dec = decide(jax.ShapeDtypeStruct((n, k), w.dtype), x2.shape[0],
-                 ctx=ctx)
-    if dec.route == "dense_pallas":
-        from repro.kernels.dense_mm import ops as dmm_ops
-        rt = jnp.result_type(x2.dtype, w.dtype)   # match `@` promotion
-        y = dmm_ops.dense_mm(x2.astype(rt), w.astype(rt),
-                             interpret=ctx.interpret)
-    else:
-        y = x2 @ w
-    return y.reshape(*lead, n)
+    from repro import sparse as sparse_api
+    return sparse_api.matmul(x, w,
+                             ctx=sparse_api.PlanContext.from_dispatch(ctx))
 
 
 def batched_matmul(a: jax.Array, b: jax.Array, *,
                    ctx: Optional[DispatchContext] = None) -> jax.Array:
     """Batched dense ``[..., C, D] @ [..., D, F]`` (MoE expert GEMMs).
-    One decision for the per-slice problem; the chosen kernel is vmapped
-    over the leading batch axes."""
+    DEPRECATED shim over ``repro.sparse.batched_matmul`` (one plan for
+    the per-slice problem, vmapped over the batch axes)."""
     ctx = ctx or current_ctx()
-    cdim, ddim = a.shape[-2], a.shape[-1]
-    fdim = b.shape[-1]
-    dec = decide(jax.ShapeDtypeStruct((cdim, ddim), a.dtype), fdim, ctx=ctx)
-    rt = jnp.result_type(a.dtype, b.dtype)        # einsum-like promotion
-    if dec.route == "dense_pallas":
-        from repro.kernels.dense_mm import ops as dmm_ops
-        f = lambda aa, bb: dmm_ops.dense_mm(aa, bb, interpret=ctx.interpret)
-        for _ in range(a.ndim - 2):
-            f = jax.vmap(f)
-        return f(a.astype(rt), b.astype(rt))
-    return jnp.matmul(a.astype(rt), b.astype(rt))
+    from repro import sparse as sparse_api
+    return sparse_api.batched_matmul(
+        a, b, ctx=sparse_api.PlanContext.from_dispatch(ctx))
 
 
 # ---------------------------------------------------------------------------

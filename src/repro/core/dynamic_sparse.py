@@ -42,6 +42,20 @@ class DynamicOperand:
     shape: Tuple[int, int]
     block_size: int
 
+    def __post_init__(self):
+        # static-aux validation only (values/indices may be tracers or
+        # placeholder leaves during pytree transformations)
+        m, k = self.shape
+        b = self.block_size
+        if b <= 0:
+            raise ValueError(f"block_size must be positive, got {b}")
+        if m % b or k % b:
+            raise ValueError(
+                f"DynamicOperand shape {self.shape} is not divisible by "
+                f"block_size {b}; pad the operand to block multiples "
+                f"(ceil-div grids would leave partial blocks the encoded "
+                f"slot arrays cannot address)")
+
     def tree_flatten(self):
         return ((self.values, self.row_idx, self.col_idx, self.nnz),
                 (self.shape, self.block_size))
@@ -56,8 +70,11 @@ class DynamicOperand:
 
     @property
     def grid(self):
+        # ceil-div, consistent with BlockSparseMatrix.grid (divisibility is
+        # enforced in __post_init__, so this equals floor-div in practice;
+        # ceil keeps the two containers interchangeable in grid math)
         b = self.block_size
-        return (self.shape[0] // b, self.shape[1] // b)
+        return (-(-self.shape[0] // b), -(-self.shape[1] // b))
 
     def to_dense(self) -> jax.Array:
         mb, kb = self.grid
@@ -100,9 +117,18 @@ def encode(dense_w: jax.Array, block_mask: jax.Array, *, block_size: int,
 
 def encode_from_bsr(bsr: BlockSparseMatrix, *, nnz_max: int) -> DynamicOperand:
     """Encode an existing (possibly static) BSR into fixed capacity slots."""
+    m, k = bsr.shape
+    if m % bsr.block_size or k % bsr.block_size:
+        raise ValueError(
+            f"BSR shape {bsr.shape} is not divisible by block_size "
+            f"{bsr.block_size}; cannot encode partial blocks into fixed "
+            f"slots -- pad the matrix to block multiples first")
     nnz = bsr.nnz_blocks
     if nnz > nnz_max:
-        raise ValueError(f"nnz {nnz} exceeds capacity {nnz_max}")
+        raise ValueError(
+            f"pattern nnz {nnz} exceeds capacity nnz_max={nnz_max}; raise "
+            f"nnz_max (or d_max upstream) to at least {nnz}, or prune the "
+            f"pattern before encoding")
     b = bsr.block_size
     pad = nnz_max - nnz
     vals = jnp.concatenate(
@@ -159,14 +185,15 @@ def dspmm(op: DynamicOperand, x: jax.Array, *, backend: str = "auto",
           interpret: bool = False) -> jax.Array:
     """``Y = decode(op) @ X`` with ``X: [k, n]`` -> ``Y: [m, n]``.
 
-    ``backend`` delegates to ``repro.core.dispatch``: "auto" lets the
-    autotune layer choose; "xla"/"pallas" force the corresponding
-    dynamic route (the historical behaviour)."""
+    DEPRECATED shim: prefer ``repro.sparse.plan(op, n)``.  ``backend``
+    maps onto the plan-first routes: "auto" lets the planner choose;
+    "xla"/"pallas"/"grouped" force the corresponding dynamic route."""
     if x.shape[0] != op.shape[1]:
         raise ValueError(f"X rows {x.shape[0]} != k {op.shape[1]}")
     from repro.core import dispatch  # local import: dispatch imports us
     mode = {"auto": "auto", "xla": "dynamic_xla",
-            "pallas": "dynamic_pallas"}.get(backend)
+            "pallas": "dynamic_pallas",
+            "grouped": "dynamic_grouped"}.get(backend)
     if mode is None:
         raise ValueError(f"unknown backend {backend!r}")
     ctx = dispatch.DispatchContext(mode=mode, interpret=interpret)

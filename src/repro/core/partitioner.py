@@ -67,25 +67,53 @@ class TilePacking:
     _nnz_area: int = 0
 
 
-def pack_tiles(bsr: BlockSparseMatrix, tm: int = 128, tk: int = 128) -> TilePacking:
-    """Pack a static BSR matrix into MXU-aligned dense tiles.
+@dataclasses.dataclass(frozen=True)
+class PackingPlan:
+    """One-time host analysis of a static pattern's tile packing.
 
-    This is the TPU analogue of PopSparse's compile-time value re-ordering:
-    the returned ``values`` tensor is laid out exactly in kernel-visit
-    order, and the index arrays are baked into the grid as scalar-prefetch
-    constants.
+    Splits ``pack_tiles`` into its two phases: this object is the pattern
+    half (pure host metadata, computed once per pattern -- the plan-first
+    contract of ``repro.sparse``); ``pack_values`` is the value half (a
+    device scatter that re-runs per call while weights train).
     """
-    if not bsr.is_static:
-        raise ValueError("pack_tiles requires a static (host-indexed) pattern")
-    m, k = bsr.shape
-    b = bsr.block_size
+
+    tile_rows: np.ndarray     # [T] int32
+    tile_cols: np.ndarray     # [T] int32
+    block_slot: np.ndarray    # [nnz] tile-stack slot of each logical block
+    in_r: np.ndarray          # [nnz] block row within its tile
+    in_c: np.ndarray          # [nnz] block col within its tile
+    tm: int
+    tk: int
+    grid: Tuple[int, int]     # (Mt, Kt)
+    shape: Tuple[int, int]    # (m, k)
+    block_size: int
+    nnz_blocks: int
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.tile_rows.shape[0])
+
+    @property
+    def occupancy(self) -> float:
+        dense_area = self.num_tiles * self.tm * self.tk
+        nnz_area = self.nnz_blocks * self.block_size ** 2
+        return float(nnz_area) / dense_area if dense_area else 0.0
+
+
+def plan_packing(row_idx: np.ndarray, col_idx: np.ndarray,
+                 shape: Tuple[int, int], block_size: int,
+                 tm: int = 128, tk: int = 128) -> PackingPlan:
+    """Pattern phase of ``pack_tiles``: which tiles exist and where each
+    logical block lands.  Host-only, runs once per pattern."""
+    m, k = shape
+    b = block_size
     if tm % b or tk % b:
         raise ValueError(f"tile ({tm},{tk}) not divisible by block {b}")
     mt, kt = -(-m // tm), -(-k // tk)
     rpb, cpb = tm // b, tk // b  # logical blocks per tile, each dim
 
-    rows = np.asarray(bsr.row_idx)
-    cols = np.asarray(bsr.col_idx)
+    rows = np.asarray(row_idx)
+    cols = np.asarray(col_idx)
     t_r, t_c = rows // rpb, cols // cpb
     lin = t_r * kt + t_c
     uniq = np.unique(lin)
@@ -95,24 +123,47 @@ def pack_tiles(bsr: BlockSparseMatrix, tm: int = 128, tk: int = 128) -> TilePack
                      dtype=uniq.dtype)
     uniq = np.sort(np.concatenate([uniq, pad]))
     slot_of = {int(v): i for i, v in enumerate(uniq)}
-    T = len(uniq)
 
-    tile_rows = (uniq // kt).astype(np.int32)
-    tile_cols = (uniq % kt).astype(np.int32)
+    return PackingPlan(
+        tile_rows=(uniq // kt).astype(np.int32),
+        tile_cols=(uniq % kt).astype(np.int32),
+        block_slot=np.asarray([slot_of[int(v)] for v in lin], np.int64),
+        in_r=(rows % rpb).astype(np.int64),
+        in_c=(cols % cpb).astype(np.int64),
+        tm=tm, tk=tk, grid=(mt, kt), shape=(m, k), block_size=b,
+        nnz_blocks=len(rows))
 
-    # scatter logical blocks into the tile stack (one-time relayout)
-    slots = np.asarray([slot_of[int(v)] for v in lin], np.int64)
-    in_r = (rows % rpb).astype(np.int64)
-    in_c = (cols % cpb).astype(np.int64)
-    vals = jnp.asarray(bsr.values)
-    tiles = jnp.zeros((T, rpb, b, cpb, b), vals.dtype)
-    tiles = tiles.at[jnp.asarray(slots), jnp.asarray(in_r), :,
-                     jnp.asarray(in_c), :].add(vals)
-    tiles = tiles.reshape(T, tm, tk)
 
-    packing = TilePacking(tile_rows, tile_cols, tiles, tm, tk,
-                          (mt, kt), (m, k))
-    object.__setattr__(packing, "_nnz_area", int(bsr.nnz_blocks) * b * b)
+def pack_values(plan: PackingPlan, values) -> jax.Array:
+    """Value phase of ``pack_tiles``: scatter ``[nnz, b, b]`` blocks into
+    the ``[T, tm, tk]`` tile stack laid out in kernel-visit order.
+    Jit-compatible (metadata is host constants)."""
+    b = plan.block_size
+    rpb, cpb = plan.tm // b, plan.tk // b
+    vals = jnp.asarray(values)
+    tiles = jnp.zeros((plan.num_tiles, rpb, b, cpb, b), vals.dtype)
+    tiles = tiles.at[jnp.asarray(plan.block_slot), jnp.asarray(plan.in_r),
+                     :, jnp.asarray(plan.in_c), :].add(vals)
+    return tiles.reshape(plan.num_tiles, plan.tm, plan.tk)
+
+
+def pack_tiles(bsr: BlockSparseMatrix, tm: int = 128, tk: int = 128) -> TilePacking:
+    """Pack a static BSR matrix into MXU-aligned dense tiles.
+
+    This is the TPU analogue of PopSparse's compile-time value re-ordering:
+    the returned ``values`` tensor is laid out exactly in kernel-visit
+    order, and the index arrays are baked into the grid as scalar-prefetch
+    constants.  (Composition of ``plan_packing`` + ``pack_values``.)
+    """
+    if not bsr.is_static:
+        raise ValueError("pack_tiles requires a static (host-indexed) pattern")
+    meta = plan_packing(bsr.row_idx, bsr.col_idx, bsr.shape,
+                        bsr.block_size, tm, tk)
+    tiles = pack_values(meta, bsr.values)
+    packing = TilePacking(meta.tile_rows, meta.tile_cols, tiles, tm, tk,
+                          meta.grid, bsr.shape)
+    object.__setattr__(packing, "_nnz_area", int(bsr.nnz_blocks)
+                       * bsr.block_size ** 2)
     return packing
 
 
@@ -176,16 +227,39 @@ class ShardedBlocks:
         return int(self.values.shape[1])
 
 
-def shard_blocks_by_k(bsr: BlockSparseMatrix, q: int,
-                      *, balanced: bool = True) -> ShardedBlocks:
-    """Distribute blocks over ``q`` k-partitions (static partitioner output).
+@dataclasses.dataclass(frozen=True)
+class KShardPlan:
+    """One-time host analysis of the nnz-balanced k-partition.
 
-    ``balanced=True`` uses nnz-balanced uneven splits (static mode);
-    ``balanced=False`` uses fixed equal splits (dynamic mode) -- useful to
-    measure the imbalance cost the paper attributes to dynamic sparsity.
+    Pattern half of ``shard_blocks_by_k`` (plan-first contract): split
+    boundaries + per-block shard/slot destinations, all host constants.
+    ``apply_k_shards`` is the per-call value half.
     """
+
+    boundaries: np.ndarray   # [q+1] block-col split positions
+    row_idx: np.ndarray      # [q, slots] int32 (host; padding row 0)
+    col_idx: np.ndarray      # [q, slots] int32 (padding -> owned column)
+    dst_q: np.ndarray        # [nnz] destination shard, in src_order
+    dst_slot: np.ndarray     # [nnz] destination slot, in src_order
+    src_order: np.ndarray    # [nnz] source permutation (stable by owner)
+    shape: Tuple[int, int]
+    block_size: int
+    real_counts: np.ndarray  # [q] nnz blocks actually owned per shard
+
+    @property
+    def q(self) -> int:
+        return int(self.row_idx.shape[0])
+
+    @property
+    def slots(self) -> int:
+        return int(self.row_idx.shape[1])
+
+
+def plan_k_shards(bsr: BlockSparseMatrix, q: int,
+                  *, balanced: bool = True) -> KShardPlan:
+    """Pattern phase of ``shard_blocks_by_k``: boundaries + destinations."""
     if not bsr.is_static:
-        raise ValueError("shard_blocks_by_k requires static pattern")
+        raise ValueError("plan_k_shards requires static pattern")
     mask = bsr.block_mask()
     mb, kb = mask.shape
     bounds = (balanced_k_splits(mask, q) if balanced else even_k_splits(kb, q))
@@ -196,8 +270,6 @@ def shard_blocks_by_k(bsr: BlockSparseMatrix, q: int,
     slots = int(counts.max()) if len(counts) else 1
     slots = max(slots, 1)
 
-    b = bsr.block_size
-    val_out = jnp.zeros((q, slots, b, b), bsr.values.dtype)
     row_out = np.zeros((q, slots), np.int32)
     col_out = np.zeros((q, slots), np.int32)
     for s in range(q):
@@ -211,10 +283,35 @@ def shard_blocks_by_k(bsr: BlockSparseMatrix, q: int,
         fill[qq] += 1
     row_out[dst_q, dst_slot] = rows[src_order]
     col_out[dst_q, dst_slot] = cols[src_order]
-    val_out = val_out.at[jnp.asarray(dst_q), jnp.asarray(dst_slot)].set(
-        jnp.asarray(bsr.values)[jnp.asarray(src_order)])
-    return ShardedBlocks(val_out, jnp.asarray(row_out), jnp.asarray(col_out),
-                         bounds, bsr.shape, b, counts)
+    return KShardPlan(bounds, row_out, col_out, dst_q, dst_slot, src_order,
+                      bsr.shape, bsr.block_size, counts)
+
+
+def apply_k_shards(plan: KShardPlan, values) -> ShardedBlocks:
+    """Value phase: scatter ``[nnz, b, b]`` blocks into the stacked
+    ``[q, slots, b, b]`` shard layout.  Jit-compatible."""
+    b = plan.block_size
+    vals = jnp.asarray(values)
+    val_out = jnp.zeros((plan.q, plan.slots, b, b), vals.dtype)
+    val_out = val_out.at[jnp.asarray(plan.dst_q),
+                         jnp.asarray(plan.dst_slot)].set(
+        vals[jnp.asarray(plan.src_order)])
+    return ShardedBlocks(val_out, jnp.asarray(plan.row_idx),
+                         jnp.asarray(plan.col_idx), plan.boundaries,
+                         plan.shape, b, plan.real_counts)
+
+
+def shard_blocks_by_k(bsr: BlockSparseMatrix, q: int,
+                      *, balanced: bool = True) -> ShardedBlocks:
+    """Distribute blocks over ``q`` k-partitions (static partitioner output).
+
+    ``balanced=True`` uses nnz-balanced uneven splits (static mode);
+    ``balanced=False`` uses fixed equal splits (dynamic mode) -- useful to
+    measure the imbalance cost the paper attributes to dynamic sparsity.
+    (Composition of ``plan_k_shards`` + ``apply_k_shards``.)
+    """
+    return apply_k_shards(plan_k_shards(bsr, q, balanced=balanced),
+                          bsr.values)
 
 
 def balance_report(counts: np.ndarray) -> dict:

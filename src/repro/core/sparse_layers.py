@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dispatch
 from repro.core import dynamic_sparse as dsp
 from repro.core import masks as masks_lib
 from repro.core.bsr import BlockSparseMatrix
@@ -83,15 +82,20 @@ class SparseLinear:
                                  (self.out_features, self.in_features),
                                  self.block_size)
 
-    def _ctx(self) -> dispatch.DispatchContext:
+    def _plan_ctx(self):
+        from repro import sparse as sparse_api
         if self.backend in ("xla", "pallas"):    # historical spellings
-            return dispatch.DispatchContext(mode=f"static_{self.backend}")
-        return dispatch.DispatchContext(mode=self.backend)
+            return sparse_api.PlanContext(mode=f"static_{self.backend}")
+        return sparse_api.PlanContext(mode=self.backend)
 
     def apply(self, params, x: jax.Array) -> jax.Array:
+        # plan-first: the pattern analysis + route decision happen once
+        # per (pattern, shape) in the sparse plan cache; training steps
+        # re-enter with fresh values only
+        from repro import sparse as sparse_api
         bsr = self.as_bsr(params)
-        y = dispatch.spmm_nt(bsr, x.astype(params["values"].dtype),
-                             ctx=self._ctx())
+        y = sparse_api.spmm_nt(bsr, x.astype(params["values"].dtype),
+                               ctx=self._plan_ctx())
         if self.use_bias:
             y = y + params["bias"]
         return y

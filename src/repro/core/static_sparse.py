@@ -109,17 +109,22 @@ def make_spmm(row_idx: np.ndarray, col_idx: np.ndarray,
 
 def spmm(bsr: BlockSparseMatrix, x: jax.Array, *,
          backend: str = "xla", interpret: bool = False) -> jax.Array:
-    """``Y = (M ⊙ W) @ X`` with ``X: [k, n]`` -> ``Y: [m, n]``."""
+    """``Y = (M ⊙ W) @ X`` with ``X: [k, n]`` -> ``Y: [m, n]``.
+
+    DEPRECATED shim: prefer ``repro.sparse.plan(bsr, n)`` -- this
+    builds (or fetches) the corresponding forced-route plan and calls
+    it, so the pattern analysis runs once per pattern, not per call."""
     _check_static(bsr)
     if x.shape[0] != bsr.shape[1]:
         raise ValueError(f"X rows {x.shape[0]} != k {bsr.shape[1]}")
-    if backend == "xla":
-        f = make_spmm(bsr.row_idx, bsr.col_idx, bsr.grid, bsr.block_size)
-        return f(jnp.asarray(bsr.values), x)
-    if backend == "pallas":
-        from repro.kernels.bsmm import ops as bsmm_ops
-        return bsmm_ops.bsmm(bsr, x, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
+    route = {"xla": "static_xla", "pallas": "static_pallas"}.get(backend)
+    if route is None:
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro import sparse as sparse_api
+    p = sparse_api.plan(bsr, int(x.shape[1]),
+                        ctx=sparse_api.PlanContext(mode=route,
+                                                   interpret=interpret))
+    return p(jnp.asarray(bsr.values), x)
 
 
 def spmm_nt(bsr: BlockSparseMatrix, x: jax.Array, *,

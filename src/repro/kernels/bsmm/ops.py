@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bsr import BlockSparseMatrix
-from repro.core.partitioner import TilePacking, pack_tiles
+from repro.core.partitioner import (PackingPlan, TilePacking, pack_tiles,
+                                    pack_values)
 from repro.kernels.bsmm.bsmm import bsmm_call
 
 
@@ -38,6 +39,22 @@ def bsmm_packed(packing: TilePacking, x, *, tn: int | None = None,
                      packing.values, x,
                      tm=packing.tm, tk=packing.tk, tn=tn,
                      grid_m=packing.grid[0], interpret=interpret)
+
+
+def bsmm_from_plan(meta: PackingPlan, values, x, *, tn: int | None = None,
+                   interpret: bool = False):
+    """SpMM from a one-time ``partitioner.plan_packing`` analysis: the
+    pattern metadata is a baked host constant, only the value relayout
+    (``pack_values``) runs per call.  This is the ``repro.sparse``
+    plan-execute path for the ``static_pallas`` route."""
+    m, k = meta.shape
+    n = x.shape[-1]
+    tn = tn or _pick_tiles(m, k, n, meta.tk)[2]
+    tiles = pack_values(meta, values)
+    return bsmm_call(jnp.asarray(meta.tile_rows),
+                     jnp.asarray(meta.tile_cols), tiles, x,
+                     tm=meta.tm, tk=meta.tk, tn=tn,
+                     grid_m=meta.grid[0], interpret=interpret)
 
 
 def bsmm(bsr: BlockSparseMatrix, x, *, tm: int | None = None,

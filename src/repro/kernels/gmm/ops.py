@@ -1,8 +1,21 @@
-"""Jit'd wrapper for the grouped matmul kernel."""
+"""Jit'd wrappers for the grouped matmul kernel + the device-side tile
+packer behind the ``dynamic_grouped`` dispatch route.
+
+``dynamic_grouped`` is the TPU-native dynamic mode priced by
+``cost_model.dsmm_grouped_time``: instead of walking ``b x b`` logical
+blocks (which under-fill the 128x128 MXU for small ``b``), the runtime
+pattern is packed *on device* into MXU-aligned ``t x t`` tile slots --
+the grouped-layout idea of this kernel family applied to a runtime
+block-sparse operand.  Dynamic costs stay visible: fixed tile capacity
+(overflow tiles are dropped, the paper's bucket-overflow semantics) and
+the on-device pack (sort + scatter) replace static mode's free
+compile-time packing.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.dynamic_sparse import DynamicOperand
 from repro.kernels.gmm.gmm import gmm_call
 
 
@@ -11,6 +24,104 @@ def _fit(t, pref):
     while t % v:
         v //= 2
     return max(v, 1)
+
+
+def grouped_tile_size(m: int, k: int, b: int, limit: int = 128) -> int:
+    """Largest square tile ``t <= limit`` that is a multiple of the
+    logical block ``b`` and divides both ``m`` and ``k``.  Worst case
+    ``t == b`` (the pack degenerates to the plain block walk)."""
+    t = b * max(1, limit // b)
+    while t > b and (m % t or k % t):
+        t -= b
+    if m % t or k % t:
+        raise ValueError(f"no tile size <= {limit} divides both m={m} and "
+                         f"k={k} at block {b}")
+    return t
+
+
+def pack_tiles_device(op: DynamicOperand, *, tile: int,
+                      tiles_cap: int) -> DynamicOperand:
+    """Pack a runtime block pattern into ``tiles_cap`` dense ``tile x
+    tile`` slots, entirely on device (jit-compatible, runtime indices).
+
+    The device analogue of ``partitioner.plan_packing``/``pack_values``:
+    blocks are sorted by their covering tile, each distinct tile gets one
+    slot, and blocks sharing a tile scatter-add into it.  Tiles beyond
+    ``tiles_cap`` are dropped (fixed-bucket overflow, paper §3.3); padded
+    tile slots carry zero values at (0, 0) and contribute exactly zero.
+    """
+    m, k = op.shape
+    b = op.block_size
+    t = tile
+    if t % b or m % t or k % t:
+        raise ValueError(f"tile {t} must be a block-multiple divisor of "
+                         f"shape {op.shape} (block {b})")
+    rpb = cpb = t // b
+    mt, kt = m // t, k // t
+    s = op.capacity
+    tiles_cap = max(1, tiles_cap)
+    if s == 0:
+        # empty operand: one zero tile at (0, 0) contributes exactly zero
+        return DynamicOperand(
+            jnp.zeros((tiles_cap, t, t), op.values.dtype),
+            jnp.zeros((tiles_cap,), jnp.int32),
+            jnp.zeros((tiles_cap,), jnp.int32),
+            jnp.asarray(0, jnp.int32), (m, k), t)
+
+    # padding slots (beyond op.nnz, zero values at row 0 / col 0) must
+    # not claim a tile slot: send them past every real tile via a
+    # sentinel so they land in the cropped scratch slot
+    sentinel = mt * kt
+    valid = jnp.arange(s) < op.nnz             # encoders pack real first
+    t_r = op.row_idx // rpb
+    t_c = op.col_idx // cpb
+    lin = jnp.where(valid, t_r * kt + t_c, sentinel)  # tile per slot [S]
+    order = jnp.argsort(lin)
+    sl = lin[order]
+    vmask = sl < sentinel                      # valid slots, sorted first
+    new_tile = vmask & jnp.concatenate(
+        [jnp.ones((1,), bool), sl[1:] != sl[:-1]])
+    rank = jnp.cumsum(new_tile.astype(jnp.int32)) - 1  # per distinct tile
+    num_tiles = jnp.minimum(jnp.sum(new_tile.astype(jnp.int32)), tiles_cap)
+    # overflow + padding land in a scratch slot that is cropped afterwards
+    dst = jnp.where(vmask & (rank < tiles_cap), rank, tiles_cap)
+
+    vals = op.values[order]
+    in_r = (op.row_idx[order] % rpb).astype(jnp.int32)
+    in_c = (op.col_idx[order] % cpb).astype(jnp.int32)
+    tiles = jnp.zeros((tiles_cap + 1, rpb, b, cpb, b), op.values.dtype)
+    tiles = tiles.at[dst, in_r, :, in_c, :].add(vals)
+    tiles = tiles.reshape(tiles_cap + 1, t, t)[:tiles_cap]
+
+    safe_sl = jnp.where(vmask, sl, 0)
+    tile_rows = jnp.zeros((tiles_cap + 1,), jnp.int32
+                          ).at[dst].set((safe_sl // kt).astype(jnp.int32)
+                                        )[:tiles_cap]
+    tile_cols = jnp.zeros((tiles_cap + 1,), jnp.int32
+                          ).at[dst].set((safe_sl % kt).astype(jnp.int32)
+                                        )[:tiles_cap]
+    return DynamicOperand(tiles, tile_rows, tile_cols, num_tiles,
+                          (m, k), t)
+
+
+def grouped_spmm(op: DynamicOperand, x, *, tile: int | None = None,
+                 tiles_cap: int | None = None, interpret: bool = False):
+    """``Y = decode(op) @ X`` through device-side tile packing + the
+    full-tile slot-walk kernel (the ``dynamic_grouped`` route).
+
+    ``tiles_cap`` defaults to the safe worst-case bound (every slot in a
+    distinct tile); ``repro.sparse`` plans pass the expected-tiles +
+    headroom capacity from the cost model instead.
+    """
+    m, k = op.shape
+    t = tile or grouped_tile_size(m, k, op.block_size)
+    mt, kt = m // t, k // t
+    if tiles_cap is None:
+        tiles_cap = min(op.capacity, mt * kt)
+    tiles_cap = max(1, min(tiles_cap, mt * kt))
+    packed = pack_tiles_device(op, tile=t, tiles_cap=tiles_cap)
+    from repro.kernels.dsmm import ops as dsmm_ops
+    return dsmm_ops.dsmm(packed, x, interpret=interpret)
 
 
 def gmm(x, w, expert_ids, *, tm: int | None = None, tf: int | None = None,

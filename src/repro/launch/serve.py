@@ -30,13 +30,17 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--retained", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persistent autotune cache dir (repro.sparse): "
+                         "restarts skip re-planning/re-measurement")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(args.seed))
     eng = Engine(lm, params, batch=args.batch, max_len=args.max_len,
-                 retained=args.retained)
+                 retained=args.retained, plan_cache_dir=args.plan_cache)
+    print(f"[serve] startup plans: {eng.plan_stats}")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,

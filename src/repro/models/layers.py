@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dispatch
+from repro import sparse as sparse_api
 
 
 def _norm_init(d):
@@ -35,9 +35,10 @@ def dense_init(key, d_in, d_out, *, bias: bool = False, dtype=jnp.bfloat16,
 
 
 def dense(params, x):
-    # routed through the dispatch layer so serving/training pick up the
-    # ambient DispatchContext (dense Pallas kernel on TPU, XLA elsewhere)
-    y = dispatch.matmul(x, params["w"])
+    # routed through the plan-first sparse API so serving/training pick
+    # up the ambient context (dense Pallas kernel on TPU, XLA elsewhere);
+    # the per-shape plan is built once and reused across calls/steps
+    y = sparse_api.matmul(x, params["w"])
     if "b" in params:
         y = y + params["b"]
     return y

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dispatch
+from repro import sparse as sparse_api
 from repro.models.layers import dense, dense_init
 from repro.sharding.rules import constrain
 
@@ -159,14 +159,15 @@ def _moe_gspmd(params, cfg, x: jax.Array) -> tuple[jax.Array, MoEMetrics]:
     # layer on qwen3-moe train_4k).
     buckets = constrain(jnp.take(xf, token_for_slot, axis=0),
                         "model", "batch", None)                 # [E, C, D]
-    # expert GEMMs go through the dispatch layer (one decision for the
-    # per-expert [C, D] @ [D, F] problem, vmapped over E)
-    h_g = dispatch.batched_matmul(buckets, params["w_gate"])
-    h_u = dispatch.batched_matmul(buckets, params["w_up"])
+    # expert GEMMs go through the plan-first sparse API (one plan for
+    # the per-expert [C, D] @ [D, F] problem, built at first trace and
+    # reused every step, vmapped over E)
+    h_g = sparse_api.batched_matmul(buckets, params["w_gate"])
+    h_u = sparse_api.batched_matmul(buckets, params["w_up"])
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
     h = constrain(act(h_g) * h_u, "model", "batch", None)
     out_e = constrain(
-        dispatch.batched_matmul(h, params["w_down"]),
+        sparse_api.batched_matmul(h, params["w_down"]),
         "model", "batch", None)                                 # [E, C, D]
 
     # --- combine: expert-side weighted scatter-add (associative, so GSPMD
@@ -258,10 +259,10 @@ def _moe_shard_map(params, cfg, x, mesh, ba) -> tuple[jax.Array, MoEMetrics]:
             w_up = jax.lax.all_gather(w_up, "data", axis=1, tiled=True)
             w_down = jax.lax.all_gather(w_down, "data", axis=1, tiled=True)
         buckets = jnp.take(xf, tfs_loc, axis=0)          # [E_loc, C, D]
-        h_g = dispatch.batched_matmul(buckets, w_gate)
-        h_u = dispatch.batched_matmul(buckets, w_up)
+        h_g = sparse_api.batched_matmul(buckets, w_gate)
+        h_u = sparse_api.batched_matmul(buckets, w_up)
         act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-        out_e = dispatch.batched_matmul(act(h_g) * h_u, w_down)
+        out_e = sparse_api.batched_matmul(act(h_g) * h_u, w_down)
         contrib = out_e.astype(cdt) * w_slot_loc[..., None].astype(cdt)
         y = jnp.zeros((bl * s_, d_), cdt).at[
             tfs_loc.reshape(-1)].add(contrib.reshape(-1, d_))

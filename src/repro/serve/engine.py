@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sparse as sparse_api
 from repro.core import dispatch
 from repro.models.model import LM
 
@@ -41,28 +42,41 @@ class Request:
 class Engine:
     def __init__(self, lm: LM, params, *, batch: int, max_len: int,
                  retained: bool = False, sample: str = "greedy",
-                 dispatch_ctx: Optional[dispatch.DispatchContext] = None):
+                 dispatch_ctx: Optional[dispatch.DispatchContext] = None,
+                 plan_cache_dir: Optional[str] = None,
+                 warm_plans: bool = True):
         self.lm = lm
         self.params = params
         self.batch = batch
         self.max_len = max_len
         self.retained = retained
         # every matmul in the traced programs consults this context (the
-        # decode/prefill decision cache is warmed at first trace);
+        # decode/prefill matmul plans are built at engine startup);
         # serving is forward-only, so Pallas routes are admissible
         self.dispatch_ctx = dispatch_ctx or dispatch.DispatchContext(
             differentiable=False)
+        # per-engine planning policy: the dispatch knobs plus persistent
+        # autotune (measured/analytic route verdicts survive serving
+        # restarts via the repro.sparse disk cache); scoped to THIS
+        # engine's traced programs, not process-global state
+        self.plan_ctx = sparse_api.PlanContext.from_dispatch(
+            self.dispatch_ctx)
+        if plan_cache_dir is not None:
+            self.plan_ctx = dataclasses.replace(
+                self.plan_ctx, cache_dir=plan_cache_dir, persist=True)
         self.caches = lm.init_cache(batch, max_len)
         self.positions = np.zeros((batch,), np.int32)
         self.live: Dict[int, Request] = {}       # slot -> request
         self.free = list(range(batch))
 
         def decode_fn(p, t, c, pos):
-            with dispatch.use_ctx(self.dispatch_ctx):
+            with dispatch.use_ctx(self.dispatch_ctx), \
+                    sparse_api.use_ctx(self.plan_ctx):
                 return lm.decode_step(p, t, c, pos, retained=retained)
 
         def prefill_fn(p, t):
-            with dispatch.use_ctx(self.dispatch_ctx):
+            with dispatch.use_ctx(self.dispatch_ctx), \
+                    sparse_api.use_ctx(self.plan_ctx):
                 return lm.prefill(p, t, max_len=max_len)
 
         self._decode = jax.jit(decode_fn)
@@ -72,6 +86,29 @@ class Engine:
             return jax.tree.map(
                 lambda c, r: c.at[:, slot].set(r[:, 0]), caches, row)
         self._write_slot = jax.jit(write_slot)
+
+        # plan-first startup: abstractly trace the decode program once so
+        # every matmul plan it needs is constructed NOW -- steady-state
+        # decode then issues zero dispatch decisions (plan-cache hits
+        # only, and after the first compile no Python at all)
+        self.plan_stats: Dict[str, int] = {}
+        if warm_plans:
+            before = sparse_api.cache_stats()
+            jax.eval_shape(
+                decode_fn, self.params,
+                jax.ShapeDtypeStruct((batch, 1), jnp.int32), self.caches,
+                jax.ShapeDtypeStruct((batch,), jnp.int32))
+            after = sparse_api.cache_stats()
+            self.plan_stats = {k: after[k] - before.get(k, 0)
+                               for k in ("plans_built", "plan_hits",
+                                         "decisions", "measurements",
+                                         "disk_hits")}
+
+    def plan_report(self) -> dict:
+        """Plans built at engine startup (decode program) + live cache
+        counters -- the serving view of the plan-first lifecycle."""
+        return {"startup": dict(self.plan_stats),
+                "now": sparse_api.cache_stats()}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: Request) -> bool:

@@ -1,0 +1,46 @@
+"""``repro.sparse`` -- the plan-first public sparse-matmul API.
+
+PopSparse's headline speedups come from *ahead-of-time* planning: for
+static sparsity the pattern is baked into the compiled graph (§3.2),
+and even dynamic sparsity fixes its bucket plan up front (§3.3).  This
+package makes that lifecycle explicit -- two phases:
+
+    from repro import sparse
+
+    # phase 1 (once): normalization, pattern analysis + tile packing,
+    # route selection (cost model / measured autotune / disk cache),
+    # dynamic bucket sizing, mesh-aware TP sharding
+    p = sparse.plan(operand, n, ctx=sparse.PlanContext(...))
+
+    # phase 2 (hot path): a decision-free direct call
+    y = p(values, x)          # or p.apply(operand, x)
+
+Measured verdicts persist to a versioned on-disk cache (configure via
+``sparse.configure(cache_dir=...)`` or $REPRO_CACHE_DIR), so serving
+restarts re-plan with zero re-measurement.
+
+``sparse.spmm`` / ``spmm_nt`` / ``matmul`` / ``batched_matmul`` are
+one-shot conveniences over the plan cache; ``repro.core.dispatch``'s
+entry points remain as deprecation shims that build-and-call a plan.
+"""
+from repro.sparse.cache import SCHEMA_VERSION  # noqa: F401
+from repro.sparse.plan import (  # noqa: F401
+    MatmulPlan,
+    batched_matmul,
+    cache_stats,
+    configure,
+    explain,
+    format_plan,
+    matmul,
+    plan,
+    reset,
+    spmm,
+    spmm_nt,
+    use_ctx,
+)
+from repro.sparse.spec import (  # noqa: F401
+    OpSpec,
+    PlanContext,
+    PLAN_MODES,
+    PLAN_ROUTES,
+)

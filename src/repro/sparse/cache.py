@@ -1,0 +1,148 @@
+"""Persistent autotune cache for the plan-first sparse API.
+
+PopSparse's planning is ahead-of-time; ours additionally *persists*: a
+measured (or analytic) route verdict is a stable property of
+``(op, kind, m, k, n, block, density-bucket, dtype, mode)`` on a given
+backend (the Sparsity Roofline observation), so it is written to a
+versioned JSON file and reloaded by later processes -- a serving restart
+re-plans with zero re-measurement.
+
+Layout: one file per cache dir,
+
+    <dir>/sparse-plans-v<SCHEMA_VERSION>.json
+    {"env": {"schema": .., "backend": .., "jax": ..},
+     "entries": {"<key>": {"route": .., "source": .., "est_seconds": ..}}}
+
+A file whose ``env`` does not match the running process (schema bump,
+different backend, different jax version) is *stale*: it is ignored on
+read (counted in ``stale_drops``) and overwritten on the next store.
+
+``cache_stats()`` exposes the counters the acceptance tests assert on:
+``plans_built / plan_hits / decisions / measurements / disk_hits /
+disk_misses / disk_writes / stale_drops``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, Optional
+
+import jax
+
+SCHEMA_VERSION = 1
+
+_lock = threading.RLock()
+_configured_dir: Optional[str] = None
+# per-dir loaded entries: {dir: {key: record}}; None marks "load failed /
+# stale" so we do not re-read the file every miss
+_loaded: Dict[str, Optional[Dict[str, dict]]] = {}
+
+_COUNTERS = ("plans_built", "plan_hits", "decisions", "measurements",
+             "disk_hits", "disk_misses", "disk_writes", "stale_drops")
+_stats: Dict[str, int] = {c: 0 for c in _COUNTERS}
+
+
+def bump(counter: str, by: int = 1):
+    with _lock:
+        _stats[counter] += by
+
+
+def cache_stats() -> dict:
+    with _lock:
+        return dict(_stats)
+
+
+def configure(cache_dir: Optional[str] = None):
+    """Set the process-default persistent cache directory (overrides
+    $REPRO_CACHE_DIR; pass None to clear)."""
+    global _configured_dir
+    with _lock:
+        _configured_dir = cache_dir
+        _loaded.clear()
+
+
+def configured_cache_dir() -> Optional[str]:
+    return _configured_dir
+
+
+def reset(*, counters: bool = True):
+    """Forget all in-memory cache state (loaded files, counters).  Disk
+    files are untouched -- this simulates a fresh process for tests."""
+    with _lock:
+        _loaded.clear()
+        if counters:
+            for c in _COUNTERS:
+                _stats[c] = 0
+
+
+def _env() -> dict:
+    return {"schema": SCHEMA_VERSION,
+            "backend": jax.default_backend(),
+            "jax": jax.__version__}
+
+
+def _path(cache_dir: str) -> str:
+    return os.path.join(cache_dir, f"sparse-plans-v{SCHEMA_VERSION}.json")
+
+
+def _load(cache_dir: str) -> Dict[str, dict]:
+    with _lock:
+        cached = _loaded.get(cache_dir, "missing")
+        if cached != "missing":
+            return cached or {}
+        entries: Dict[str, dict] = {}
+        try:
+            with open(_path(cache_dir)) as f:
+                blob = json.load(f)
+            if blob.get("env") != _env():
+                bump("stale_drops")
+            else:
+                entries = dict(blob.get("entries", {}))
+        except FileNotFoundError:
+            pass
+        except (json.JSONDecodeError, OSError, TypeError, ValueError):
+            bump("stale_drops")      # corrupt file == stale file
+        _loaded[cache_dir] = entries
+        return entries
+
+
+def key_string(fingerprint: tuple) -> str:
+    return "|".join(str(part) for part in fingerprint)
+
+
+def load_decision(cache_dir: Optional[str],
+                  key: str) -> Optional[dict]:
+    """-> {"route", "source", "est_seconds"} or None.  Bumps
+    disk_hits/disk_misses."""
+    if not cache_dir:
+        return None
+    rec = _load(cache_dir).get(key)
+    bump("disk_hits" if rec is not None else "disk_misses")
+    return rec
+
+
+def store_decision(cache_dir: Optional[str], key: str, record: dict):
+    """Merge one verdict into the cache file (atomic replace)."""
+    if not cache_dir:
+        return
+    with _lock:
+        entries = dict(_load(cache_dir))
+        if entries.get(key) == record:
+            return
+        entries[key] = record
+        os.makedirs(cache_dir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"env": _env(), "entries": entries}, f, indent=1)
+            os.replace(tmp, _path(cache_dir))
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return                     # persistence is best-effort
+        _loaded[cache_dir] = entries
+        bump("disk_writes")

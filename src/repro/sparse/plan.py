@@ -1,0 +1,572 @@
+"""Two-phase plan/execute sparse matmul (the plan-first public API).
+
+    from repro import sparse
+
+    p = sparse.plan(operand, n)            # phase 1: ALL one-time work
+    y = p(values, x)                       # phase 2: zero-decision call
+    y = p.apply(operand, x)                # payload extracted for you
+    print(sparse.format_plan(p))           # what will run, and why
+
+Phase 1 mirrors PopSparse's ahead-of-time planning: operand
+normalization, pattern analysis (``partitioner.plan_packing`` /
+``plan_k_shards`` -- the one-time halves of the packing and TP
+sharding), route selection through the dispatch cost model (optionally
+wall-clock measured), dynamic bucket sizing (``planner.plan_dynamic``),
+and mesh-aware TP routes from ``core/tp.py``.  The result is a frozen
+``MatmulPlan`` whose execute closure contains no decisions: safe under
+``jax.jit`` / ``grad`` / ``vmap`` (XLA routes), and a plain direct call
+in the steady state.
+
+Verdicts persist to a versioned on-disk cache (``sparse.cache``), so a
+serving restart re-plans without re-measuring.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.dispatch as dispatch
+import repro.core.partitioner as partitioner
+import repro.core.planner as planner_lib
+import repro.core.static_sparse as _ssp
+import repro.core.tp as tp_lib
+from repro.core.bsr import BlockSparseMatrix
+from repro.core.dynamic_sparse import DynamicOperand, _dspmm
+from repro.sparse import cache as cache_lib
+from repro.sparse.spec import (OpSpec, PlanContext, PLAN_ROUTES,
+                               pattern_key, payload_of)
+
+Operand = Union[jax.Array, np.ndarray, BlockSparseMatrix, DynamicOperand]
+
+_plan_cache: Dict[tuple, "MatmulPlan"] = {}
+_plan_lock = threading.Lock()
+
+
+def reset(*, counters: bool = True):
+    """Forget every in-memory plan, decision, and (optionally) counter.
+    Disk cache files survive -- this simulates a fresh process."""
+    with _plan_lock:
+        _plan_cache.clear()
+    cache_lib.reset(counters=counters)
+    dispatch.clear_cache()
+
+
+def cache_stats() -> dict:
+    """Plan/decision counters + live cache sizes (see ``sparse.cache``)."""
+    stats = cache_lib.cache_stats()
+    stats["plan_entries"] = len(_plan_cache)
+    return stats
+
+
+def configure(cache_dir: Optional[str] = None):
+    """Set the process-default persistent cache directory."""
+    cache_lib.configure(cache_dir)
+
+
+# ---------------------------------------------------------------------------
+# MatmulPlan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatmulPlan:
+    """Frozen verdict of ``sparse.plan``: route + one-time artifacts +
+    a decision-free execute closure.
+
+    Call ``plan(payload, x)`` with the per-call payload:
+
+    * static kind  -- the ``[nnz, b, b]`` values (pattern is baked in)
+    * dynamic kind -- the ``DynamicOperand`` (pattern is runtime data)
+    * dense kind   -- the dense weight array
+
+    ``apply(operand, x)`` extracts the payload from a full operand.
+    """
+
+    spec: OpSpec
+    route: str
+    source: str                      # analytic | measured | forced
+    est_seconds: Dict[str, float]
+    from_disk: bool
+    ctx: PlanContext
+    key: str                         # persistent-cache key string
+    artifacts: Dict[str, Any]
+    _execute: Optional[Callable] = None
+
+    @property
+    def executable(self) -> bool:
+        return self._execute is not None
+
+    def __call__(self, payload, x) -> jax.Array:
+        if self._execute is None:
+            raise ValueError(
+                f"plan for {self.spec} was built from an OpSpec without a "
+                f"concrete pattern; build it from the operand to execute "
+                f"(spec-only static plans are explain/report-only)")
+        s = self.spec
+        # the contraction dim is baked into every route's metadata; a
+        # mismatch must fail here, not deep inside a kernel.  (n may
+        # differ from the planned n -- routes tile n at trace time.)
+        if s.op == "spmm":
+            if x.ndim != 2 or x.shape[0] != s.k:
+                raise ValueError(f"plan expects x of shape [k={s.k}, n]; "
+                                 f"got {x.shape}")
+        elif s.op == "matmul":
+            if x.shape[-1] != s.k or tuple(payload.shape) != (s.k, s.m):
+                raise ValueError(
+                    f"plan expects w [k={s.k}, n={s.m}] and x [..., "
+                    f"{s.k}]; got w {payload.shape}, x {x.shape}")
+        elif s.op == "batched_matmul":
+            if payload.shape[-1] != s.k or x.shape[-2] != s.k:
+                raise ValueError(
+                    f"plan expects [..., C, D={s.k}] @ [..., D={s.k}, F]; "
+                    f"got {payload.shape} @ {x.shape}")
+        return self._execute(payload, x)
+
+    def apply(self, operand: Operand, x) -> jax.Array:
+        return self(payload_of(operand), x)
+
+    def vjp(self, payload, x):
+        """``(y, vjp_fn)`` through the planned route (XLA routes only --
+        the Pallas kernels are forward-only)."""
+        return jax.vjp(lambda v, xx: self(v, xx), payload, x)
+
+    def explain(self) -> dict:
+        """Full decision report (dispatch-report compatible + the plan's
+        one-time artifacts)."""
+        s = self.spec
+        return {
+            "problem": {"kind": s.kind, "m": s.m, "k": s.k, "n": s.n,
+                        "block_size": s.block_size,
+                        "density": round(s.density, 5),
+                        "density_bucket":
+                            dispatch._density_bucket(s.density),
+                        "dtype": s.dtype},
+            "mode": s.mode,
+            "op": s.op,
+            "pallas_admissible": dispatch._pallas_ok(self.ctx.dispatch_ctx()),
+            "candidates": {r: self.est_seconds[r] for r in
+                           sorted(self.est_seconds,
+                                  key=self.est_seconds.get)},
+            "chosen": self.route,
+            "source": self.source,
+            "cached": self.from_disk,
+            "from_disk": self.from_disk,
+            "cache_key": self.key,
+            "plan": dict(self.artifacts, executable=self.executable),
+        }
+
+
+def format_plan(plan: MatmulPlan) -> str:
+    """Human-readable plan report (quickstart / perf_cell / debugging)."""
+    rep = plan.explain()
+    lines = [dispatch.format_explain(rep)]
+    art = rep["plan"]
+    extra = []
+    if "packing_tiles" in art:
+        extra.append(f"packing: {art['packing_tiles']} MXU tiles, "
+                     f"occupancy {art['packing_occupancy']:.3f}")
+    if "bucket_blocks" in art:
+        extra.append(f"buckets: {art['bucket_blocks']} blocks/bucket over "
+                     f"q=({art['q_m']},{art['q_k']},{art['q_n']})")
+    if "tp_q" in art:
+        extra.append(f"tp: q={art['tp_q']} nnz-balanced k-shards over "
+                     f"'{art['tp_axis']}'")
+    if "grouped_tile" in art:
+        t = art["grouped_tile"]
+        cap = art.get("grouped_tiles_cap")   # exact only for static kind
+        extra.append(f"grouped: {t}x{t} tile slots"
+                     + (f" (cap {cap})" if cap is not None else ""))
+    if extra:
+        lines.append("   plan: " + "; ".join(extra))
+    lines.append(f"   ({'disk-cached' if plan.from_disk else 'planned'} "
+                 f"{'executable' if plan.executable else 'report-only'})")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Decision (memory -> disk -> dispatch cost model / measurement)
+# ---------------------------------------------------------------------------
+
+def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
+    dctx = ctx.dispatch_ctx()
+    base = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
+                               spec.block_size, spec.density, spec.dtype,
+                               dctx)
+    q = ctx.resolved_tp_q()
+    tp = ("tp", q, ctx.tp_axis) if q else ()
+    return ("plan", spec.op, spec.mode) + base + tp
+
+
+def _tp_estimate(spec: OpSpec, q: int) -> float:
+    """Paper Fig 1a at mesh scale: nnz-balanced local SpMM (1/q of the
+    static work) + the single output reduction over the TP axis."""
+    t_local = dispatch._estimate("static_xla", spec.m, spec.k, spec.n,
+                                 spec.block_size, spec.density,
+                                 spec.dtype) / max(1, q)
+    bytes_el = max(1, jnp.dtype(spec.dtype).itemsize)
+    t_reduce = (spec.m * spec.n * bytes_el) * max(0, q - 1) / max(1, q) \
+        / planner_lib.ICI_BW
+    return t_local + t_reduce
+
+
+def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
+            x) -> Tuple[str, Dict[str, float], str, bool]:
+    """-> (route, est_seconds, source, from_disk)."""
+    dctx = ctx.dispatch_ctx()
+    key = cache_lib.key_string(_fingerprint(spec, ctx))
+    use_disk = ctx.cache and ctx.persistence_on()
+    if use_disk:
+        rec = cache_lib.load_decision(ctx.resolved_cache_dir(), key)
+        if rec is not None and rec.get("route") in PLAN_ROUTES:
+            return (rec["route"], dict(rec.get("est_seconds", {})),
+                    rec.get("source", "analytic"), True)
+
+    cache_lib.bump("decisions")
+    q = ctx.resolved_tp_q()
+    forced_tp = spec.mode == "static_tp"
+    if forced_tp:
+        if spec.kind != "static":
+            raise ValueError(f"mode 'static_tp' cannot execute a "
+                             f"{spec.kind} operand")
+        if not q:
+            raise ValueError("mode 'static_tp' needs ctx.mesh (with "
+                             "ctx.tp_axis) or an explicit ctx.tp_q")
+        route = "static_tp"
+        est = {"static_tp": _tp_estimate(spec, q)}
+        source = "forced"
+    elif operand is not None:
+        dkey = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
+                                   spec.block_size, spec.density,
+                                   spec.dtype, dctx)
+        already = dkey in dispatch._decision_cache
+        dec = dispatch.decide(operand, spec.n, ctx=dctx, x=x)
+        if dec.source == "measured" and not already:
+            cache_lib.bump("measurements")
+        route, est, source = dec.route, dict(dec.est_seconds), dec.source
+    else:
+        # OpSpec-only: analytic pricing straight off the cost model
+        cands = dispatch._candidates(spec.kind, dctx)
+        est = {r: dispatch._estimate(r, spec.m, spec.k, spec.n,
+                                     spec.block_size, spec.density,
+                                     spec.dtype) for r in cands}
+        route = min(est, key=est.get)
+        source = "forced" if len(cands) == 1 else "analytic"
+
+    # mesh-aware TP candidate (auto mode, static pattern, mesh present)
+    if (not forced_tp and spec.kind == "static" and spec.mode == "auto"
+            and ctx.mesh is not None and q and q > 1
+            and source != "measured"):
+        est["static_tp"] = _tp_estimate(spec, q)
+        if est["static_tp"] < est[route]:
+            route = "static_tp"
+
+    if use_disk:
+        cache_lib.store_decision(
+            ctx.resolved_cache_dir(), key,
+            {"route": route, "source": source,
+             "est_seconds": {r: float(s) for r, s in est.items()}})
+    return route, est, source, False
+
+
+# ---------------------------------------------------------------------------
+# Execute-closure builders (one per (kind, route) arm; each closure is
+# decision-free -- all metadata is a host constant baked at plan time)
+# ---------------------------------------------------------------------------
+
+def _promote_matmul(w, x, *, pallas: bool, interpret: bool):
+    rt = jnp.result_type(w.dtype, x.dtype)
+    if pallas:
+        from repro.kernels.dense_mm import ops as dmm_ops
+        return dmm_ops.dense_mm(w.astype(rt), x.astype(rt),
+                                interpret=interpret)
+    return jnp.matmul(w.astype(rt), x.astype(rt))
+
+
+def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
+                     operand: BlockSparseMatrix):
+    m, k, b = spec.m, spec.k, spec.block_size
+    mb, kb = m // b, k // b
+    rows = np.asarray(operand.row_idx, np.int32)
+    cols = np.asarray(operand.col_idx, np.int32)
+    interpret = ctx.interpret
+    art: Dict[str, Any] = {"nnz_blocks": len(rows)}
+
+    if route == "static_xla":
+        fn = _ssp.make_spmm(rows, cols, (mb, kb), b)
+        return (lambda v, x: fn(jnp.asarray(v), x)), art
+
+    if route == "static_pallas":
+        from repro.kernels.bsmm import ops as bsmm_ops
+        tm, tk, _ = bsmm_ops._pick_tiles(m, k, spec.n, b)
+        meta = partitioner.plan_packing(rows, cols, (m, k), b, tm, tk)
+        art.update(packing_tiles=meta.num_tiles,
+                   packing_occupancy=meta.occupancy)
+        # tn is picked at trace time from the actual x (calling the plan
+        # with a different n than planned must not mis-tile the kernel)
+        return (lambda v, x: bsmm_ops.bsmm_from_plan(
+            meta, v, x, interpret=interpret)), art
+
+    if route in ("dense_xla", "dense_pallas"):
+        rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
+        pallas = route == "dense_pallas"
+
+        def run(v, x):
+            v = jnp.asarray(v)
+            w = jnp.zeros((mb, kb, b, b), v.dtype).at[rows_j, cols_j].add(v)
+            w = w.transpose(0, 2, 1, 3).reshape(m, k)
+            return _promote_matmul(w, x, pallas=pallas, interpret=interpret)
+        return run, art
+
+    if route in ("dynamic_xla", "dynamic_pallas", "dynamic_grouped"):
+        rows_d = jnp.asarray(rows, jnp.int32)
+        cols_d = jnp.asarray(cols, jnp.int32)
+        nnz = jnp.asarray(len(rows), jnp.int32)
+        if route == "dynamic_xla":
+            return (lambda v, x: _dspmm(jnp.asarray(v), rows_d, cols_d, x,
+                                        mb, b)), art
+
+        def as_dyn(v):
+            return DynamicOperand(jnp.asarray(v), rows_d, cols_d, nnz,
+                                  (m, k), b)
+        if route == "dynamic_grouped":
+            from repro.kernels.gmm import ops as gmm_ops
+            t = gmm_ops.grouped_tile_size(m, k, b)
+            # static pattern -> the exact tile count is known at plan time
+            meta = partitioner.plan_packing(rows, cols, (m, k), b, t, t)
+            cap = meta.num_tiles
+            art.update(grouped_tile=t, grouped_tiles_cap=cap)
+            return (lambda v, x: gmm_ops.grouped_spmm(
+                as_dyn(v), x, tile=t, tiles_cap=cap,
+                interpret=interpret)), art
+        from repro.kernels.dsmm import ops as dsmm_ops
+        return (lambda v, x: dsmm_ops.dsmm(as_dyn(v), x,
+                                           interpret=interpret)), art
+
+    if route == "static_tp":
+        q = ctx.resolved_tp_q()
+        shard_meta = partitioner.plan_k_shards(operand, q)
+        bal = partitioner.balance_report(shard_meta.real_counts)
+        art.update(tp_q=q, tp_axis=ctx.tp_axis,
+                   tp_imbalance=bal["imbalance"], tp_slots=shard_meta.slots)
+        axis = ctx.tp_axis
+        return (lambda v, x: tp_lib.tp_spmm_gspmd(
+            partitioner.apply_k_shards(shard_meta, v), x, axis=axis)), art
+
+    raise ValueError(f"unknown static route {route!r}")
+
+
+def _dynamic_executor(spec: OpSpec, route: str, ctx: PlanContext):
+    m, k, b = spec.m, spec.k, spec.block_size
+    mb = m // b
+    interpret = ctx.interpret
+    dplan = planner_lib.plan_dynamic(m, k, spec.n, d_max=spec.density,
+                                     block_size=b, units=ctx.units)
+    art: Dict[str, Any] = dict(bucket_blocks=dplan.bucket_blocks,
+                               nnz_max_blocks=dplan.nnz_max_blocks,
+                               q_m=dplan.q_m, q_k=dplan.q_k, q_n=dplan.q_n)
+
+    if route == "dynamic_xla":
+        return (lambda op, x: _dspmm(op.values, op.row_idx, op.col_idx,
+                                     x, mb, b)), art
+    if route == "dynamic_pallas":
+        from repro.kernels.dsmm import ops as dsmm_ops
+        return (lambda op, x: dsmm_ops.dsmm(op, x,
+                                            interpret=interpret)), art
+    if route == "dynamic_grouped":
+        from repro.kernels.gmm import ops as gmm_ops
+        t = gmm_ops.grouped_tile_size(m, k, b)
+        # runtime pattern: keep the safe worst-case tile capacity (no
+        # silent overflow drops); the paper-style planned bucket stays
+        # in the artifacts for reporting
+        art.update(grouped_tile=t)
+        return (lambda op, x: gmm_ops.grouped_spmm(
+            op, x, tile=t, interpret=interpret)), art
+    if route in ("dense_xla", "dense_pallas"):
+        pallas = route == "dense_pallas"
+        return (lambda op, x: _promote_matmul(op.to_dense(), x,
+                                              pallas=pallas,
+                                              interpret=interpret)), art
+    raise ValueError(f"unknown dynamic route {route!r}")
+
+
+def _dense_executor(spec: OpSpec, route: str, ctx: PlanContext):
+    interpret = ctx.interpret
+    art: Dict[str, Any] = {}
+    if spec.op == "matmul":
+        pallas = route == "dense_pallas"
+        # activation-major: x2 @ w (operand order swapped vs spmm form)
+        return (lambda w, x2: _promote_matmul(x2, w, pallas=pallas,
+                                              interpret=interpret)), art
+    if spec.op == "batched_matmul":
+        pallas = route == "dense_pallas"
+
+        def run(a, bb):
+            rt = jnp.result_type(a.dtype, bb.dtype)
+            if pallas:
+                from repro.kernels.dense_mm import ops as dmm_ops
+                f = lambda x_, y_: dmm_ops.dense_mm(x_, y_,
+                                                    interpret=interpret)
+                for _ in range(a.ndim - 2):
+                    f = jax.vmap(f)
+                return f(a.astype(rt), bb.astype(rt))
+            return jnp.matmul(a.astype(rt), bb.astype(rt))
+        return run, art
+    pallas = route == "dense_pallas"
+    return (lambda w, x: _promote_matmul(jnp.asarray(w), x, pallas=pallas,
+                                         interpret=interpret)), art
+
+
+def _build_executor(spec: OpSpec, route: str, ctx: PlanContext,
+                    operand: Optional[Operand]):
+    if spec.kind == "static":
+        if operand is None or not isinstance(operand, BlockSparseMatrix):
+            return None, {}          # spec-only static plan: report-only
+        return _static_executor(spec, route, ctx, operand)
+    if spec.kind == "dynamic":
+        return _dynamic_executor(spec, route, ctx)
+    return _dense_executor(spec, route, ctx)
+
+
+# ---------------------------------------------------------------------------
+# plan() + conveniences
+# ---------------------------------------------------------------------------
+
+_ctx_state = threading.local()
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: PlanContext):
+    """Install ``ctx`` as the ambient planning context (trace-scoped):
+    every ``plan``/``matmul``/... call without an explicit ``ctx`` picks
+    it up.  The serving engine wraps its traced programs with this so
+    per-engine policy (persistent cache dir, Pallas admissibility) never
+    leaks into process-global state."""
+    prev = getattr(_ctx_state, "ctx", None)
+    _ctx_state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _ctx_state.ctx = prev
+
+
+def _resolve_ctx(ctx) -> PlanContext:
+    if ctx is None:
+        ambient = getattr(_ctx_state, "ctx", None)
+        if ambient is not None:
+            return ambient
+        return PlanContext.from_dispatch(dispatch.current_ctx())
+    if isinstance(ctx, dispatch.DispatchContext):
+        return PlanContext.from_dispatch(ctx)
+    return ctx
+
+
+def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
+         ctx: Optional[PlanContext] = None) -> MatmulPlan:
+    """Phase 1 of the two-phase API: run all one-time work for
+    ``operand @ [k, n]`` and return a frozen ``MatmulPlan``.
+
+    ``operand_or_spec`` is a full operand (dense array /
+    ``BlockSparseMatrix`` / ``DynamicOperand``) -- or an ``OpSpec`` for
+    spec-only planning (dense/dynamic plans stay executable; static
+    plans without the concrete pattern are report-only).  ``x`` is used
+    only for measured autotune (``ctx.measure=True``, concrete inputs).
+    """
+    ctx = _resolve_ctx(ctx)
+    if isinstance(operand_or_spec, OpSpec):
+        spec, operand = operand_or_spec, None
+        if ctx.mode != spec.mode:
+            ctx = dataclasses.replace(ctx, mode=spec.mode)
+    else:
+        operand = operand_or_spec
+        if n is None:
+            raise ValueError("plan(operand, n): n is required when "
+                             "planning from a concrete operand")
+        spec = OpSpec.from_operand(operand, n, mode=ctx.mode)
+
+    pkey = pattern_key(operand) if operand is not None else None
+    fp = _fingerprint(spec, ctx)
+    # the persistence policy is part of the plan-cache identity: a plan
+    # built without persistence must not shadow a later persistent
+    # request (which still needs to write/read the disk cache)
+    persist_key = (ctx.resolved_cache_dir() if ctx.persistence_on()
+                   else None)
+    mem_key = (fp, pkey, persist_key)
+    if ctx.cache:
+        hit = _plan_cache.get(mem_key)
+        if hit is not None:
+            cache_lib.bump("plan_hits")
+            return hit
+
+    route, est, source, from_disk = _decide(spec, ctx, operand, x)
+    execute, artifacts = _build_executor(spec, route, ctx, operand)
+    p = MatmulPlan(spec=spec, route=route, source=source,
+                   est_seconds=est, from_disk=from_disk, ctx=ctx,
+                   key=cache_lib.key_string(fp), artifacts=artifacts,
+                   _execute=execute)
+    cache_lib.bump("plans_built")
+    if ctx.cache:
+        with _plan_lock:
+            p = _plan_cache.setdefault(mem_key, p)
+    return p
+
+
+def explain(operand_or_spec, n: Optional[int] = None, *,
+            ctx: Optional[PlanContext] = None) -> dict:
+    """Plan and report in one step (non-executing)."""
+    return plan(operand_or_spec, n, ctx=ctx).explain()
+
+
+def spmm(operand: Operand, x, *, ctx: Optional[PlanContext] = None):
+    """One-shot ``Y = W @ X`` (plan + execute; the plan is cached, so
+    repeated calls are dict hits -- prefer holding the plan in hot
+    loops)."""
+    ctx = _resolve_ctx(ctx)
+    _, _, k, _, _ = dispatch._normalize(operand)
+    if x.ndim != 2:
+        raise ValueError(f"x must be [k, n], got shape {x.shape}")
+    if x.shape[0] != k:
+        raise ValueError(f"X rows {x.shape[0]} != operand k {k}")
+    p = plan(operand, int(x.shape[1]), x=x, ctx=ctx)
+    return p.apply(operand, x)
+
+
+def spmm_nt(operand: Operand, x, *, ctx: Optional[PlanContext] = None):
+    """Activation-major form ``x: [..., k] -> [..., m]`` (y = x @ W^T)."""
+    _, m, k, _, _ = dispatch._normalize(operand)
+    lead = x.shape[:-1]
+    y = spmm(operand, x.reshape(-1, k).T, ctx=ctx)
+    return y.T.reshape(*lead, m)
+
+
+def matmul(x, w, *, ctx: Optional[PlanContext] = None):
+    """Dense-layer form ``y = x @ w`` (``x: [..., k]``, ``w: [k, n]``) --
+    what ``models.layers.dense`` and the serving engine execute with."""
+    ctx = _resolve_ctx(ctx)
+    if isinstance(w, (BlockSparseMatrix, DynamicOperand)):
+        raise ValueError("matmul() takes a dense rhs; use spmm_nt for "
+                         "sparse operands")
+    lead = x.shape[:-1]
+    k, n_out = w.shape
+    x2 = x.reshape(-1, k)
+    spec = OpSpec(kind="dense", m=n_out, k=k, n=int(x2.shape[0]),
+                  dtype=jnp.dtype(w.dtype).name, op="matmul",
+                  mode=ctx.mode if ctx.mode in dispatch.MODES else "auto")
+    y = plan(spec, ctx=ctx)(w, x2)
+    return y.reshape(*lead, n_out)
+
+
+def batched_matmul(a, b, *, ctx: Optional[PlanContext] = None):
+    """Batched dense ``[..., C, D] @ [..., D, F]`` (MoE expert GEMMs):
+    one plan for the per-slice problem, vmapped over the batch axes."""
+    ctx = _resolve_ctx(ctx)
+    cdim, ddim = a.shape[-2], a.shape[-1]
+    fdim = b.shape[-1]
+    spec = OpSpec(kind="dense", m=cdim, k=ddim, n=int(fdim),
+                  dtype=jnp.dtype(a.dtype).name, op="batched_matmul",
+                  mode=ctx.mode if ctx.mode in dispatch.MODES else "auto")
+    return plan(spec, ctx=ctx)(a, b)

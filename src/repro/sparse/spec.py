@@ -1,0 +1,198 @@
+"""Problem + policy descriptions for the plan-first sparse API.
+
+``OpSpec`` is the *logical problem*: everything the planner needs to
+choose and price an execution strategy -- exactly the paper's
+compile-time data (shape, block size, density, dtype) plus the operand
+kind and the mode policy.  It is frozen and hashable: one OpSpec ==
+one plan-cache fingerprint (modulo the concrete pattern, which static
+plans additionally key on).
+
+``PlanContext`` is the *planning policy*: the dispatch knobs
+(measure / allow_pallas / interpret / differentiable) plus the
+plan-first extras -- persistent cache location, mesh for TP-aware
+routes, and the partition-budget the dynamic planner sizes buckets
+with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.dispatch as dispatch
+from repro.core.bsr import BlockSparseMatrix
+from repro.core.dynamic_sparse import DynamicOperand
+
+KINDS = ("dense", "static", "dynamic")
+OPS = ("spmm", "matmul", "batched_matmul")
+
+# sparse-level plannable routes = dispatch routes + the mesh-aware route
+# lifted from core/tp.py (dispatch cannot model it: it needs the pattern
+# artifacts and a mesh axis)
+PLAN_ROUTES = dispatch.ROUTES + ("static_tp",)
+PLAN_MODES = dispatch.MODES + ("static_tp",)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """Logical matmul problem for ``repro.sparse.plan``.
+
+    kind        operand family: "dense" | "static" | "dynamic"
+    m, k, n     ``[m, k] @ [k, n]`` logical sizes (for op="matmul" the
+                canonical transposed view: m = out features, n = tokens;
+                for op="batched_matmul" the per-slice problem)
+    block_size  b (1 for dense)
+    density     true block density (static) or d_max capacity (dynamic)
+    dtype       operand dtype name (canonical jnp name)
+    op          "spmm" (Y = W @ X) | "matmul" (x @ w, dense) |
+                "batched_matmul" ([..., C, D] @ [..., D, F], dense)
+    mode        dispatch mode: "auto", a family, a route id, or
+                "static_tp"
+    """
+
+    kind: str
+    m: int
+    k: int
+    n: int
+    block_size: int = 1
+    density: float = 1.0
+    dtype: str = "float32"
+    op: str = "spmm"
+    mode: str = "auto"
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown operand kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r}; expected one of "
+                             f"{OPS}")
+        if self.mode not in PLAN_MODES:
+            raise ValueError(f"unknown plan mode {self.mode!r}; expected "
+                             f"one of {PLAN_MODES}")
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+
+    @classmethod
+    def from_operand(cls, operand, n: int, *, op: str = "spmm",
+                     mode: str = "auto") -> "OpSpec":
+        """Describe ``operand @ [k, n]`` (normalizing BSR / DynamicOperand
+        / dense arrays through the dispatch operand protocol)."""
+        kind, m, k, b, density = dispatch._normalize(operand)
+        dtype = dispatch._dtype_of(operand)
+        return cls(kind=kind, m=m, k=k, n=int(n), block_size=b,
+                   density=float(density), dtype=jnp.dtype(dtype).name,
+                   op=op, mode=mode)
+
+
+def _default_cache_dir() -> Optional[str]:
+    return os.environ.get("REPRO_CACHE_DIR") or None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanContext:
+    """Planning policy for ``repro.sparse.plan``.
+
+    The first six fields mirror ``dispatch.DispatchContext`` (same
+    semantics).  Plan-first extras:
+
+    persist     write/read decisions to the on-disk cache.  None (the
+                default) enables persistence iff a cache dir is
+                configured (``cache_dir`` here, ``sparse.configure``,
+                or $REPRO_CACHE_DIR).
+    cache_dir   directory for the persistent decision cache.
+    mesh        a ``jax.sharding.Mesh``; when set (and the pattern is
+                available) the nnz-balanced TP route from ``core/tp.py``
+                joins the candidate set.
+    tp_axis     mesh axis name the TP route shards/reduces over.
+    tp_q        explicit shard count for the TP route (defaults to the
+                mesh axis size; lets tests force ``static_tp`` without a
+                real multi-device mesh).
+    units       parallel-unit budget for ``planner.plan_dynamic`` bucket
+                sizing.
+    """
+
+    mode: str = "auto"
+    measure: bool = False
+    allow_pallas: Optional[bool] = None
+    interpret: bool = False
+    differentiable: bool = True
+    cache: bool = True
+    persist: Optional[bool] = None
+    cache_dir: Optional[str] = None
+    mesh: Any = None
+    tp_axis: str = "model"
+    tp_q: Optional[int] = None
+    units: int = 16
+
+    def __post_init__(self):
+        if self.mode not in PLAN_MODES:
+            raise ValueError(f"unknown plan mode {self.mode!r}; expected "
+                             f"one of {PLAN_MODES}")
+
+    @classmethod
+    def from_dispatch(cls, ctx: dispatch.DispatchContext) -> "PlanContext":
+        return cls(mode=ctx.mode, measure=ctx.measure,
+                   allow_pallas=ctx.allow_pallas, interpret=ctx.interpret,
+                   differentiable=ctx.differentiable, cache=ctx.cache)
+
+    def dispatch_ctx(self) -> dispatch.DispatchContext:
+        # "static_tp" is a sparse-level route; the dispatch view of such
+        # a plan prices the single-chip candidates under "auto"
+        mode = self.mode if self.mode in dispatch.MODES else "auto"
+        return dispatch.DispatchContext(
+            mode=mode, measure=self.measure, allow_pallas=self.allow_pallas,
+            interpret=self.interpret, differentiable=self.differentiable,
+            cache=self.cache)
+
+    def resolved_cache_dir(self) -> Optional[str]:
+        from repro.sparse import cache as cache_lib
+        return (self.cache_dir or cache_lib.configured_cache_dir()
+                or _default_cache_dir())
+
+    def persistence_on(self) -> bool:
+        if self.persist is None:
+            return self.resolved_cache_dir() is not None
+        if self.persist and self.resolved_cache_dir() is None:
+            raise ValueError(
+                "PlanContext(persist=True) but no cache directory is "
+                "configured; set PlanContext(cache_dir=...), call "
+                "sparse.configure(cache_dir=...), or export "
+                "REPRO_CACHE_DIR")
+        return bool(self.persist)
+
+    def resolved_tp_q(self) -> Optional[int]:
+        if self.tp_q is not None:
+            return int(self.tp_q)
+        if self.mesh is not None and self.tp_axis in getattr(
+                self.mesh, "axis_names", ()):
+            return int(self.mesh.shape[self.tp_axis])
+        return None
+
+
+def pattern_key(operand) -> Optional[tuple]:
+    """Hashable identity of a *static* pattern (None for runtime
+    patterns / dense operands): plans bake the pattern in, so the plan
+    cache must not collide two patterns that share a fingerprint."""
+    if isinstance(operand, BlockSparseMatrix) and operand.is_static:
+        return (np.asarray(operand.row_idx, np.int32).tobytes(),
+                np.asarray(operand.col_idx, np.int32).tobytes())
+    return None
+
+
+def payload_of(operand):
+    """The per-call payload a plan executes with: values for static
+    patterns (the pattern itself is baked into the plan), the whole
+    operand for runtime patterns, the array for dense."""
+    if isinstance(operand, BlockSparseMatrix):
+        if operand.is_static:
+            return operand.values
+        return DynamicOperand(
+            jnp.asarray(operand.values),
+            jnp.asarray(operand.row_idx, jnp.int32),
+            jnp.asarray(operand.col_idx, jnp.int32),
+            jnp.asarray(operand.nnz_blocks, jnp.int32),
+            operand.shape, operand.block_size)
+    return operand

@@ -1,0 +1,494 @@
+"""Plan-first sparse API (repro.sparse): two-phase plan/execute
+lifecycle, route parity, jit/grad/vmap safety, disk-cache round trip +
+stale invalidation, deprecation-shim parity, and the DynamicOperand
+grid/validation fixes that ride along."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import dispatch, dynamic_sparse as dsp, \
+    static_sparse as ssp
+from repro.core.bsr import BlockSparseMatrix
+
+M, K, N, B, DENSITY = 128, 256, 64, 16, 0.25
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    sparse.reset()
+    sparse.configure(None)
+    yield
+    sparse.reset()
+    sparse.configure(None)
+
+
+def _bsr(seed=0, m=M, k=K, b=B, d=DENSITY, dtype=jnp.float32):
+    return BlockSparseMatrix.random(jax.random.PRNGKey(seed), m, k, b, d,
+                                    dtype=dtype, pattern_seed=seed)
+
+
+def _problem(seed=0, dtype=jnp.float32):
+    bsr = _bsr(seed, dtype=dtype)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100),
+                          (K, N)).astype(dtype)
+    oracle = jnp.asarray(bsr.to_dense()) @ x
+    return bsr, x, oracle
+
+
+# -- plan construction + route parity -----------------------------------------
+
+STATIC_ROUTES = ["static_xla", "dense_xla", "dynamic_xla"]
+STATIC_INTERPRET = ["static_pallas", "dense_pallas", "dynamic_pallas",
+                    "dynamic_grouped"]
+
+
+@pytest.mark.parametrize("route", STATIC_ROUTES)
+def test_static_plan_route_parity(route):
+    bsr, x, oracle = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mode=route))
+    assert p.route == route and p.executable
+    np.testing.assert_allclose(np.asarray(p(bsr.values, x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("route", STATIC_INTERPRET)
+def test_static_plan_route_parity_interpret(route):
+    bsr, x, oracle = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mode=route,
+                                                   interpret=True))
+    np.testing.assert_allclose(np.asarray(p(bsr.values, x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("route", ["dynamic_xla", "dense_xla"])
+def test_dynamic_plan_route_parity(route):
+    bsr, x, oracle = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 4)
+    p = sparse.plan(op, N, ctx=sparse.PlanContext(mode=route))
+    np.testing.assert_allclose(np.asarray(p(op, x)), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+    # bucket sizing ran at plan time
+    assert p.artifacts["bucket_blocks"] >= 1
+
+
+@pytest.mark.parametrize("route", ["dynamic_pallas", "dynamic_grouped"])
+def test_dynamic_plan_pallas_parity_interpret(route):
+    bsr, x, oracle = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 4)
+    p = sparse.plan(op, N, ctx=sparse.PlanContext(mode=route,
+                                                  interpret=True))
+    np.testing.assert_allclose(np.asarray(p(op, x)), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_static_tp_plan_parity():
+    """Mesh-aware route: nnz-balanced k-shards + one reduction."""
+    bsr, x, oracle = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mode="static_tp",
+                                                   tp_q=4))
+    assert p.route == "static_tp"
+    assert p.artifacts["tp_q"] == 4
+    np.testing.assert_allclose(np.asarray(p(bsr.values, x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+
+
+def test_auto_plan_parity_and_artifacts():
+    bsr, x, oracle = _problem()
+    p = sparse.plan(bsr, N)
+    np.testing.assert_allclose(np.asarray(p.apply(bsr, x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+    rep = p.explain()
+    assert rep["chosen"] == p.route and rep["chosen"] in rep["candidates"]
+    assert "plan" in rep and rep["plan"]["executable"]
+    assert "dispatch" in sparse.format_plan(p)   # renders the report
+
+
+def test_spec_only_static_plan_is_report_only():
+    spec = sparse.OpSpec(kind="static", m=M, k=K, n=N, block_size=B,
+                         density=DENSITY)
+    p = sparse.plan(spec)
+    assert not p.executable and p.route in sparse.PLAN_ROUTES
+    with pytest.raises(ValueError, match="report-only|OpSpec"):
+        p(jnp.zeros((1, B, B)), jnp.zeros((K, N)))
+
+
+def test_spec_only_dynamic_and_dense_plans_execute():
+    bsr, x, oracle = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    spec = sparse.OpSpec.from_operand(op, N)
+    p = sparse.plan(spec, ctx=sparse.PlanContext(mode="dynamic_xla"))
+    np.testing.assert_allclose(np.asarray(p(op, x)), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- plan reuse: cache hits, jit, grad, vmap ----------------------------------
+
+def test_plan_cache_reuse_same_pattern():
+    bsr, x, _ = _problem()
+    p1 = sparse.plan(bsr, N)
+    p2 = sparse.plan(bsr.with_values(bsr.values * 2), N)
+    assert p2 is p1                       # same pattern -> same plan obj
+    assert sparse.cache_stats()["plan_hits"] == 1
+    # a *different* pattern with the same fingerprint must NOT collide
+    other = _bsr(seed=7)
+    p3 = sparse.plan(other, N)
+    assert p3 is not p1
+    np.testing.assert_allclose(
+        np.asarray(p3(other.values, x)),
+        np.asarray(jnp.asarray(other.to_dense()) @ x), rtol=1e-4,
+        atol=1e-4)
+
+
+def test_plan_under_jit_grad_vmap():
+    bsr, x, oracle = _problem()
+    p = sparse.plan(bsr, N)
+
+    # jit: the plan is closed over; the route is baked into the program
+    f = jax.jit(lambda v, xx: p(v, xx))
+    np.testing.assert_allclose(np.asarray(f(jnp.asarray(bsr.values), x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+
+    # grad matches the dense formulation
+    def loss_sparse(values, xx):
+        return (p(values, xx) ** 2).sum()
+
+    def loss_dense(values, xx):
+        return ((bsr.with_values(values).to_dense() @ xx) ** 2).sum()
+
+    gv_s, gx_s = jax.grad(loss_sparse, argnums=(0, 1))(
+        jnp.asarray(bsr.values), x)
+    gv_d, gx_d = jax.grad(loss_dense, argnums=(0, 1))(
+        jnp.asarray(bsr.values), x)
+    np.testing.assert_allclose(np.asarray(gv_s), np.asarray(gv_d),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx_s), np.asarray(gx_d),
+                               rtol=1e-4, atol=1e-4)
+
+    # vmap over a batch of activations
+    xb = jax.random.normal(jax.random.PRNGKey(9), (3, K, 8))
+    yv = jax.vmap(lambda xx: p(jnp.asarray(bsr.values), xx))(xb)
+    want = jnp.einsum("mk,bkn->bmn", jnp.asarray(bsr.to_dense()), xb)
+    np.testing.assert_allclose(np.asarray(yv), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_plan_vjp_helper():
+    bsr, x, _ = _problem()
+    p = sparse.plan(bsr, N)
+    y, vjp_fn = p.vjp(jnp.asarray(bsr.values), x)
+    gv, gx = vjp_fn(jnp.ones_like(y))
+    assert gv.shape == bsr.values.shape and gx.shape == x.shape
+
+
+def test_steady_state_is_decision_free():
+    """After the first plan, repeated calls make NO new decisions."""
+    bsr, x, _ = _problem()
+    sparse.spmm(bsr, x)
+    base = sparse.cache_stats()
+    for _ in range(5):
+        sparse.spmm(bsr, x)
+    now = sparse.cache_stats()
+    assert now["decisions"] == base["decisions"]
+    assert now["plans_built"] == base["plans_built"]
+    assert now["plan_hits"] == base["plan_hits"] + 5
+
+
+# -- persistent cache ---------------------------------------------------------
+
+def test_disk_cache_round_trip(tmp_path):
+    """Write in 'process 1', reset all in-memory state, re-plan in
+    'process 2' with zero measurements (the acceptance criterion)."""
+    bsr, x, _ = _problem()
+    ctx = sparse.PlanContext(measure=True, cache_dir=str(tmp_path))
+    p1 = sparse.plan(bsr, N, x=x, ctx=ctx)
+    s1 = sparse.cache_stats()
+    assert s1["measurements"] == 1 and s1["disk_writes"] >= 1
+    assert p1.source == "measured" and not p1.from_disk
+
+    sparse.reset()                        # fresh-process simulation
+    p2 = sparse.plan(bsr, N, x=x, ctx=ctx)
+    s2 = sparse.cache_stats()
+    assert s2["measurements"] == 0        # zero re-measurement
+    assert s2["disk_hits"] == 1
+    assert p2.from_disk and p2.route == p1.route
+    assert p2.executable
+    np.testing.assert_allclose(np.asarray(p2(bsr.values, x)),
+                               np.asarray(p1(bsr.values, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_disk_cache_stale_version_invalidated(tmp_path):
+    bsr, x, _ = _problem()
+    ctx = sparse.PlanContext(measure=True, cache_dir=str(tmp_path))
+    sparse.plan(bsr, N, x=x, ctx=ctx)
+    path = os.path.join(str(tmp_path),
+                        f"sparse-plans-v{sparse.SCHEMA_VERSION}.json")
+    blob = json.load(open(path))
+    blob["env"]["jax"] = "0.0.0-stale"
+    json.dump(blob, open(path, "w"))
+
+    sparse.reset()
+    p = sparse.plan(bsr, N, x=x, ctx=ctx)
+    s = sparse.cache_stats()
+    assert not p.from_disk and s["stale_drops"] == 1
+    assert s["measurements"] == 1         # re-measured, then re-persisted
+    blob2 = json.load(open(path))
+    assert blob2["env"]["jax"] != "0.0.0-stale"
+
+
+def test_disk_cache_corrupt_file_ignored(tmp_path):
+    bsr, x, _ = _problem()
+    path = os.path.join(str(tmp_path),
+                        f"sparse-plans-v{sparse.SCHEMA_VERSION}.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    ctx = sparse.PlanContext(cache_dir=str(tmp_path))
+    p = sparse.plan(bsr, N, ctx=ctx)
+    assert not p.from_disk
+    assert sparse.cache_stats()["stale_drops"] == 1
+
+
+def test_no_persistence_without_cache_dir():
+    bsr, x, _ = _problem()
+    sparse.plan(bsr, N, ctx=sparse.PlanContext(measure=True), x=x)
+    s = sparse.cache_stats()
+    assert s["disk_writes"] == 0 and s["disk_hits"] == 0
+
+
+def test_explicit_persist_without_dir_raises():
+    bsr, _, _ = _problem()
+    with pytest.raises(ValueError, match="no cache directory"):
+        sparse.plan(bsr, N, ctx=sparse.PlanContext(persist=True))
+
+
+def test_use_ctx_ambient_planning_context(tmp_path):
+    bsr, x, _ = _problem()
+    ctx = sparse.PlanContext(cache_dir=str(tmp_path))
+    with sparse.use_ctx(ctx):
+        sparse.spmm(bsr, x)               # picks up the ambient ctx
+    assert sparse.cache_stats()["disk_writes"] >= 1
+    # outside the scope, persistence is off again
+    sparse.reset()
+    sparse.spmm(bsr, x)
+    assert sparse.cache_stats()["disk_writes"] == 0
+
+
+def test_format_plan_dynamic_grouped_no_crash():
+    bsr, x, _ = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    p = sparse.plan(op, N, ctx=sparse.PlanContext(mode="dynamic_grouped",
+                                                  interpret=True))
+    assert "grouped" in sparse.format_plan(p)
+
+
+# -- deprecation-shim parity --------------------------------------------------
+
+def test_dispatch_spmm_shim_matches_plan():
+    bsr, x, oracle = _problem()
+    y_shim = dispatch.spmm(bsr, x)
+    p = sparse.plan(bsr, N)
+    np.testing.assert_allclose(np.asarray(y_shim),
+                               np.asarray(p(bsr.values, x)), rtol=0,
+                               atol=0)
+    np.testing.assert_allclose(np.asarray(y_shim), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+    # the shim went through the plan cache
+    assert sparse.cache_stats()["plans_built"] >= 1
+
+
+def test_static_sparse_spmm_shim_matches_plan():
+    bsr, x, oracle = _problem()
+    y_shim = ssp.spmm(bsr, x, backend="xla")
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mode="static_xla"))
+    np.testing.assert_allclose(np.asarray(y_shim),
+                               np.asarray(p(bsr.values, x)), rtol=0,
+                               atol=0)
+    np.testing.assert_allclose(np.asarray(y_shim), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dspmm_shim_matches_plan_and_supports_grouped():
+    bsr, x, oracle = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 2)
+    for backend, route in (("xla", "dynamic_xla"),):
+        y_shim = dsp.dspmm(op, x, backend=backend)
+        p = sparse.plan(op, N, ctx=sparse.PlanContext(mode=route))
+        np.testing.assert_allclose(np.asarray(y_shim),
+                                   np.asarray(p(op, x)), rtol=0, atol=0)
+    y_grp = dsp.dspmm(op, x, backend="grouped", interpret=True)
+    np.testing.assert_allclose(np.asarray(y_grp), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_matmul_and_batched_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    np.testing.assert_allclose(np.asarray(sparse.matmul(x, w)),
+                               np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+    a = jax.random.normal(jax.random.PRNGKey(2), (3, 8, 16))
+    b = jax.random.normal(jax.random.PRNGKey(3), (3, 16, 24))
+    np.testing.assert_allclose(np.asarray(sparse.batched_matmul(a, b)),
+                               np.asarray(jnp.matmul(a, b)), rtol=1e-5,
+                               atol=1e-5)
+    # second calls are plan-cache hits
+    base = sparse.cache_stats()["plans_built"]
+    sparse.matmul(x, w)
+    sparse.batched_matmul(a, b)
+    assert sparse.cache_stats()["plans_built"] == base
+
+
+# -- dynamic_grouped as a dispatch candidate ----------------------------------
+
+def test_dynamic_grouped_in_candidates():
+    ctx = dispatch.DispatchContext(allow_pallas=True, differentiable=False)
+    assert "dynamic_grouped" in dispatch._candidates("dynamic", ctx)
+    # never offered to differentiable callers (forward-only kernel)
+    grad_ctx = dispatch.DispatchContext(allow_pallas=True)
+    assert "dynamic_grouped" not in dispatch._candidates("dynamic",
+                                                         grad_ctx)
+
+
+def test_dynamic_grouped_padded_capacity_exact_cap():
+    """Padding slots (capacity > nnz) must not claim a tile slot: with
+    tiles_cap == the exact true tile count the result is still exact."""
+    from repro.kernels.gmm import ops as gmm_ops
+    bsr = _bsr(3, m=256, k=256, b=16, d=0.1)
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 7)  # padded
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+    t = gmm_ops.grouped_tile_size(256, 256, 16)
+    from repro.core.partitioner import plan_packing
+    true_tiles = plan_packing(np.asarray(bsr.row_idx),
+                              np.asarray(bsr.col_idx), (256, 256), 16,
+                              t, t).num_tiles
+    y = gmm_ops.grouped_spmm(op, x, tiles_cap=true_tiles, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.asarray(bsr.to_dense()) @ x),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_dynamic_grouped_empty_operand_returns_zeros():
+    from repro.kernels.gmm import ops as gmm_ops
+    op = dsp.DynamicOperand(jnp.zeros((0, 16, 16)),
+                            jnp.zeros((0,), jnp.int32),
+                            jnp.zeros((0,), jnp.int32),
+                            jnp.asarray(0, jnp.int32), (128, 128), 16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 8))
+    y = gmm_ops.grouped_spmm(op, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=0.0)
+
+
+def test_persistent_ctx_not_shadowed_by_prior_plan(tmp_path):
+    """A plan built WITHOUT persistence must not satisfy a later
+    persistent request from the memory cache (the disk write would be
+    silently skipped and restarts would re-measure)."""
+    bsr, x, _ = _problem()
+    sparse.plan(bsr, N)                       # non-persistent first
+    ctx = sparse.PlanContext(cache_dir=str(tmp_path))
+    sparse.plan(bsr, N, ctx=ctx)              # persistent same problem
+    assert sparse.cache_stats()["disk_writes"] >= 1
+
+
+def test_plan_call_validates_contraction_dim():
+    bsr, x, _ = _problem()
+    p = sparse.plan(bsr, N)
+    with pytest.raises(ValueError, match=f"k={K}"):
+        p(bsr.values, jnp.zeros((K // 2, N)))
+    # a different n than planned is fine (tiling re-derives at trace)
+    y = p(bsr.values, jax.random.normal(jax.random.PRNGKey(0), (K, 24)))
+    assert y.shape == (M, 24)
+
+
+def test_static_pallas_plan_handles_unplanned_n():
+    bsr, _, _ = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mode="static_pallas",
+                                                   interpret=True))
+    x96 = jax.random.normal(jax.random.PRNGKey(2), (K, 96))   # n != N
+    np.testing.assert_allclose(
+        np.asarray(p(bsr.values, x96)),
+        np.asarray(jnp.asarray(bsr.to_dense()) @ x96), rtol=1e-4,
+        atol=1e-4)
+
+
+def test_dynamic_grouped_overflow_drops_like_buckets():
+    """With a tile capacity below the distinct-tile count, overflow
+    tiles are dropped -- the paper's fixed-bucket overflow semantics."""
+    from repro.kernels.gmm import ops as gmm_ops
+    bsr = _bsr(0, m=256, k=256, b=16, d=0.25)
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+    full = gmm_ops.grouped_spmm(op, x, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(jnp.asarray(bsr.to_dense()) @ x),
+        rtol=1e-4, atol=1e-4)
+    clipped = gmm_ops.grouped_spmm(op, x, tiles_cap=1, interpret=True)
+    assert np.isfinite(np.asarray(clipped)).all()
+
+
+# -- DynamicOperand grid + validation (satellite fixes) -----------------------
+
+def test_dynamic_operand_grid_matches_bsr_grid():
+    bsr = _bsr()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks)
+    assert op.grid == bsr.grid
+
+
+def test_dynamic_operand_rejects_non_divisible_shape():
+    with pytest.raises(ValueError, match="not divisible"):
+        dsp.DynamicOperand(jnp.zeros((1, 16, 16)), jnp.zeros((1,), jnp.int32),
+                           jnp.zeros((1,), jnp.int32),
+                           jnp.asarray(1, jnp.int32), (60, 64), 16)
+
+
+def test_encode_from_bsr_clear_capacity_error():
+    bsr = _bsr()
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks - 1)
+
+
+# -- moe / engine steady state ------------------------------------------------
+
+def test_moe_expert_gemms_plan_once():
+    """Expert GEMMs build their plans on the first call; later steps
+    (same shapes) issue zero new dispatch decisions."""
+    from repro.configs import qwen3_moe_30b_a3b
+    from repro.models.moe import moe_apply, moe_init
+    cfg = qwen3_moe_30b_a3b.make_smoke_config()
+    params = moe_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    moe_apply(params, cfg, x)
+    base = sparse.cache_stats()
+    for i in range(3):
+        moe_apply(params, cfg,
+                  jax.random.normal(jax.random.PRNGKey(2 + i), x.shape))
+    now = sparse.cache_stats()
+    assert now["decisions"] == base["decisions"]
+    assert now["plans_built"] == base["plans_built"]
+
+
+@pytest.mark.slow
+def test_engine_builds_plans_at_startup_and_stays_decision_free():
+    from repro import configs
+    from repro.models.model import LM
+    from repro.serve import Engine, Request
+    cfg = configs.smoke("llama3_2_1b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = Engine(lm, params, batch=2, max_len=64)
+    # startup warm built the decode program's plans
+    assert eng.plan_stats["plans_built"] + eng.plan_stats["plan_hits"] > 0
+    req = Request(uid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=4)
+    eng.run([req])
+    base = sparse.cache_stats()
+    req2 = Request(uid=1, prompt=np.arange(8, dtype=np.int32),
+                   max_new_tokens=4)
+    eng.run([req2])                       # steady state: same shapes
+    now = sparse.cache_stats()
+    assert now["decisions"] == base["decisions"]
+    assert now["plans_built"] == base["plans_built"]
+    assert "startup" in eng.plan_report()

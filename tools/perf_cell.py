@@ -100,17 +100,15 @@ def main():
           f"collective {roof['t_collective']*1e3:.1f}ms -> "
           f"{roof['dominant']}-bound, frac {roof.get('roofline_frac', 0):.4f}")
 
-    # dispatch report: what the autotune layer would run for this cell's
+    # plan report: what the plan-first API would run for this cell's
     # FFN matmul (per-device shapes on the production mesh)
-    import jax.numpy as jnp
-    from repro.core import dispatch
+    from repro import sparse
     tokens = meta.get("tokens_device") or configs.SHAPES[shape].get("seq", 0)
     if cfg.d_ff and tokens:
-        dctx = dispatch.DispatchContext(allow_pallas=True,
-                                        differentiable=False)
-        probe = jax.ShapeDtypeStruct((cfg.d_ff, cfg.d_model), jnp.bfloat16)
-        print(dispatch.format_explain(
-            dispatch.explain(probe, int(tokens), ctx=dctx)))
+        pctx = sparse.PlanContext(allow_pallas=True, differentiable=False)
+        spec = sparse.OpSpec(kind="dense", m=cfg.d_ff, k=cfg.d_model,
+                             n=int(tokens), dtype="bfloat16")
+        print(sparse.format_plan(sparse.plan(spec, ctx=pctx)))
 
 
 if __name__ == "__main__":
