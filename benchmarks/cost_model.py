@@ -115,6 +115,14 @@ def dsmm_grouped_time(packing, n, *, capacity_factor=1.25,
     tiles like static mode; dynamic costs are the capacity headroom
     (padded tile slots, the paper's overflow) and the on-device pack
     (scatter of nnz blocks + metadata sort).  See EXPERIMENTS.md §Perf.
+
+    ``capacity_factor`` multiplies ``packing.num_tiles`` into the slot
+    count.  Callers pricing a *planned* bucket
+    (``planner.plan_grouped_capacity``, whose ``tiles_cap`` already
+    contains the headroom) pass ``capacity_factor=1.0`` with
+    ``num_tiles = tiles_cap`` -- this is how ``core.dispatch`` prices
+    the dynamic_grouped route; the default 1.25 is the legacy
+    expected-tiles x headroom shorthand used by the Table 3 records.
     """
     tn = min(tn, n)
     slots = math.ceil(packing.num_tiles * capacity_factor)

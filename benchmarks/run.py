@@ -37,6 +37,10 @@ CLAIMS = {
     "cpu_walltime": "hardware-agnostic ordering check on real timers",
     "dispatch": "paper Table 3 as runtime plans: static routes win at "
                 "low density / large blocks, dense at high density",
+    "grouped_capacity": "paper §3.3/A.2 bucket sizing: expected-tiles + "
+                        "headroom capacity beats the safe worst case at "
+                        "low density; overflow risk is priced, not "
+                        "ignored",
 }
 
 
@@ -95,6 +99,21 @@ def _check(fig, recs):
         ok = bool(low) and any(c.startswith("static") for c in low)
         return ok, (f"{len(recs)} planned decisions; low-density b>=16 "
                     f"static routes: {sorted(set(low))}")
+    if fig == "grouped_capacity":
+        # planned capacity must never lose to the worst case, and must
+        # WIN somewhere at <=10% density with the default headroom (the
+        # PR acceptance criterion: dynamic_grouped can only take the
+        # low-density dispatch race if its planned bucket is cheaper)
+        never_worse = all(r["speedup_vs_worst"] >= 1.0 for r in recs)
+        wins = [r for r in recs if r["density"] <= 0.1
+                and r["headroom"] == 1.25 and r["speedup_vs_worst"] > 1.1]
+        best = max(recs, key=lambda r: r["speedup_vs_worst"])
+        return never_worse and bool(wins), (
+            f"{len(wins)} planned-capacity wins at d<=10% "
+            f"(best {best['speedup_vs_worst']}x at m={best['m']} "
+            f"b={best['b']} d={best['density']:.4f} "
+            f"headroom={best['headroom']}, P[overflow]="
+            f"{best['overflow_p']})")
     return True, ""
 
 
@@ -104,7 +123,7 @@ def main():
     ap.add_argument("--skip-walltime", action="store_true")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke grid for experiments that support it "
-                         "(currently: dispatch)")
+                         f"(currently: {', '.join(suite.TINY_CAPABLE)})")
     ap.add_argument("--out", default=None,
                     help="also write the records to this JSON path "
                          "(e.g. BENCH_dispatch.json for the CI artifact)")
@@ -114,8 +133,8 @@ def main():
     for fig, fn in suite.ALL.items():
         if args.only and fig != args.only:
             continue
-        if fig == "dispatch" and args.tiny:
-            all_recs[fig] = suite.dispatch_decisions(tiny=True)
+        if args.tiny and fig in suite.TINY_CAPABLE:
+            all_recs[fig] = fn(tiny=True)
         else:
             all_recs[fig] = fn()
     if not args.only and not args.skip_walltime:

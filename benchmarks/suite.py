@@ -255,6 +255,53 @@ def dispatch_decisions(tiny: bool = False):
     return recs
 
 
+# -- grouped capacity: planned bucket vs safe worst case ----------------------------------
+
+def grouped_capacity(tiny: bool = False):
+    """The paper's §3.3 capacity tradeoff made concrete for the
+    ``dynamic_grouped`` route: size the tile bucket at the planner's
+    expected-tiles x headroom (overflow possible, priced analytically)
+    vs the pre-PR-3 safe worst case, and record the speedup + overflow
+    risk of each point.  ``speedup > 1`` at low density is exactly why
+    planned capacity lets dynamic_grouped win the dispatch race there.
+    ``tiny=True`` is the CI/nightly smoke grid.
+    """
+    from repro.core import planner
+    from repro.kernels.gmm.ops import grouped_tile_size
+    recs = []
+    n = 4096
+    ms = (2048,) if tiny else (2048, 4096)
+    heads = (1.25,) if tiny else (1.0, 1.25, 1.5)
+    for m in ms:
+        for b in (16, 32):
+            for d in (1 / 4, 1 / 16, 1 / 32, 1 / 64, 1 / 128):
+                t = grouped_tile_size(m, m, b)
+
+                def time_at(cap):
+                    pk = type("_Pk", (), dict(
+                        num_tiles=cap, tm=t, tk=t,
+                        _nnz_area=int(m * m * d), shape=(m, m)))
+                    return cm.dsmm_grouped_time(pk, n,
+                                                capacity_factor=1.0)
+                for h in heads:
+                    cp = planner.plan_grouped_capacity(m, m, b, d,
+                                                       tile=t, headroom=h)
+                    t_p = time_at(cp.tiles_cap)
+                    t_w = time_at(cp.worst_tiles)
+                    recs.append(dict(
+                        fig="grouped_capacity", m=m, b=b, density=d,
+                        headroom=h, tile=t,
+                        expected_tiles=round(cp.expected_tiles, 1),
+                        tiles_cap=cp.tiles_cap,
+                        worst_tiles=cp.worst_tiles,
+                        overflow_p=round(cp.overflow_p, 4),
+                        t_planned_us=round(t_p.seconds * 1e6, 2),
+                        t_worst_us=round(t_w.seconds * 1e6, 2),
+                        speedup_vs_worst=round(t_w.seconds / t_p.seconds,
+                                               3)))
+    return recs
+
+
 # -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
 
 def occupancy_study():
@@ -281,4 +328,8 @@ ALL = {
     "fig7": fig7_speedup_grid,
     "occupancy": occupancy_study,
     "dispatch": dispatch_decisions,
+    "grouped_capacity": grouped_capacity,
 }
+
+# experiments with a reduced CI smoke grid (benchmarks.run --tiny)
+TINY_CAPABLE = ("dispatch", "grouped_capacity")

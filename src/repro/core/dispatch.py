@@ -248,12 +248,25 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
     if route.startswith("dense"):
         t = cm.dense_time(m, k, n, dtype_bytes=db)
     elif route == "dynamic_grouped":
-        # expected-occupancy stand-in for the device-side tile packing
-        tiles = _expected_tiles(m, k, b, density)
+        # price the *planned* tile bucket (expected occupancy at the
+        # real grouped tile size, plus the planner's headroom), not the
+        # worst case -- the estimate matches what the plan layer will
+        # actually allocate, so dynamic_grouped wins the dispatch race
+        # exactly where the planned capacity makes it cheap
+        from repro.core import planner as _planner
+        try:
+            from repro.kernels.gmm.ops import grouped_tile_size
+            tile = grouped_tile_size(m, k, b)
+        except (ImportError, ValueError):
+            tile = b
+        capplan = _planner.plan_grouped_capacity(m, k, b, density,
+                                                 tile=tile)
         pk = type("_Pk", (), dict(
-            num_tiles=tiles, tm=min(128, m), tk=min(128, k),
+            num_tiles=capplan.tiles_cap, tm=tile, tk=tile,
             _nnz_area=int(m * k * density), shape=(m, k)))
-        t = cm.dsmm_grouped_time(pk, n, dtype_bytes=db)
+        # headroom is already inside tiles_cap: price it at factor 1
+        t = cm.dsmm_grouped_time(pk, n, dtype_bytes=db,
+                                 capacity_factor=1.0)
     elif route.startswith("static"):
         tiles = _expected_tiles(m, k, b, density)
         tm = min(128, m)
@@ -374,8 +387,19 @@ def _run_route(route: str, operand: Operand, x: jax.Array,
             return _dspmm(op.values, op.row_idx, op.col_idx, x, mb,
                           op.block_size)
         if route == "dynamic_grouped":
+            # execute at the planned bucket (same sizing _estimate
+            # prices), so measured autotune wall-clocks the capacity the
+            # plan layer will actually allocate -- not the worst case
+            from repro.core import planner as _planner
             from repro.kernels.gmm import ops as gmm_ops
-            return gmm_ops.grouped_spmm(op, x, interpret=ctx.interpret)
+            m_, k_ = op.shape
+            b_ = op.block_size
+            t = gmm_ops.grouped_tile_size(m_, k_, b_)
+            d_ = op.capacity / max(1, (m_ // b_) * (k_ // b_))
+            cap = _planner.plan_grouped_capacity(
+                m_, k_, b_, d_, tile=t, slots=op.capacity).tiles_cap
+            return gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=cap,
+                                        interpret=ctx.interpret)
         from repro.kernels.dsmm import ops as dsmm_ops
         return dsmm_ops.dsmm(op, x, interpret=ctx.interpret)
     raise ValueError(f"unknown route {route!r}")

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 # TPU v5e single-chip constants (see system brief)
 PEAK_FLOPS_BF16 = 197e12
@@ -110,3 +110,101 @@ def nnz_max_blocks(m: int, k: int, block_size: int, d_max: float) -> int:
     """Total block-slot budget implied by ``d_max`` (no partitioning)."""
     grid = (m // block_size) * (k // block_size)
     return max(1, math.ceil(grid * d_max))
+
+
+# ---------------------------------------------------------------------------
+# Grouped-route capacity planning (paper §3.3 bucket sizing applied to the
+# dynamic_grouped tile slots): capacity = expected occupancy + headroom,
+# NOT the safe worst case -- overflow is accepted and accounted for.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupedCapacityPlan:
+    """Planned tile capacity for the ``dynamic_grouped`` route.
+
+    tile            physical tile side (MXU-aligned block multiple)
+    expected_tiles  analytic E[#distinct non-empty tiles] for a uniform
+                    random pattern at ``d_max``
+    worst_tiles     safe worst case: every slot in its own tile, capped
+                    at the tile grid (what PR 2 always allocated)
+    tiles_cap       the planned capacity actually allocated:
+                    min(worst, ceil(expected * headroom))
+    headroom        the multiplicative slack over the expectation (the
+                    paper's "some extra headroom")
+    overflow_p      analytic P[#distinct tiles > tiles_cap] (normal
+                    approximation over per-tile occupancy)
+    """
+
+    tile: int
+    expected_tiles: float
+    worst_tiles: int
+    tiles_cap: int
+    headroom: float
+    overflow_p: float
+
+    def as_dict(self) -> dict:
+        return {"tile": self.tile,
+                "expected_tiles": round(self.expected_tiles, 3),
+                "worst_tiles": self.worst_tiles,
+                "tiles_cap": self.tiles_cap,
+                "headroom": self.headroom,
+                "overflow_p": round(self.overflow_p, 6)}
+
+
+def expected_grouped_tiles(m: int, k: int, block_size: int, density: float,
+                           tile: int) -> float:
+    """E[#distinct non-empty (tile x tile) tiles] for a uniform random
+    block pattern: each tile holds ``(tile/b)^2`` logical blocks and is
+    non-empty with probability ``1 - (1 - d)^per_tile``."""
+    mt, kt = max(1, m // tile), max(1, k // tile)
+    per_tile = (tile // block_size) ** 2
+    d = min(max(density, 0.0), 1.0)
+    p = 1.0 - (1.0 - d) ** per_tile
+    return mt * kt * p
+
+
+def grouped_overflow_probability(m: int, k: int, block_size: int,
+                                 density: float, tile: int,
+                                 tiles_cap: int,
+                                 slots: Optional[int] = None) -> float:
+    """Analytic P[#distinct non-empty tiles > tiles_cap] under the same
+    random-pattern model (normal approximation with per-tile Bernoulli
+    variance -- slightly conservative vs the true without-replacement
+    pattern, which has less spread).  ``slots`` is the operand's
+    block-slot capacity: distinct tiles can never exceed it, so a
+    ``tiles_cap`` at (or above) that bound provably cannot overflow."""
+    mt, kt = max(1, m // tile), max(1, k // tile)
+    per_tile = (tile // block_size) ** 2
+    d = min(max(density, 0.0), 1.0)
+    p = 1.0 - (1.0 - d) ** per_tile
+    n_tiles = mt * kt
+    hard_max = n_tiles if slots is None else min(n_tiles, int(slots))
+    if tiles_cap >= hard_max:
+        return 0.0
+    mu = n_tiles * p
+    var = n_tiles * p * (1.0 - p)
+    if var <= 0.0:
+        return 0.0 if tiles_cap >= mu else 1.0
+    z = (tiles_cap + 0.5 - mu) / math.sqrt(var)
+    return 0.5 * (1.0 - math.erf(z / math.sqrt(2.0)))
+
+
+def plan_grouped_capacity(m: int, k: int, block_size: int, d_max: float,
+                          *, tile: int, slots: Optional[int] = None,
+                          headroom: float = HEADROOM) -> GroupedCapacityPlan:
+    """Size the ``dynamic_grouped`` tile-slot bucket the paper's way:
+    expected occupancy times ``headroom``, clamped to the safe worst
+    case.  ``slots`` is the operand's block-slot capacity (defaults to
+    the ``d_max`` budget); the worst case is one tile per slot, capped
+    at the tile grid."""
+    mt, kt = max(1, m // tile), max(1, k // tile)
+    if slots is None:
+        slots = nnz_max_blocks(m, k, block_size, d_max)
+    worst = max(1, min(int(slots), mt * kt))
+    expected = expected_grouped_tiles(m, k, block_size, d_max, tile)
+    cap = max(1, min(worst, math.ceil(expected * headroom)))
+    return GroupedCapacityPlan(
+        tile=tile, expected_tiles=expected, worst_tiles=worst,
+        tiles_cap=cap, headroom=float(headroom),
+        overflow_p=grouped_overflow_probability(m, k, block_size, d_max,
+                                                tile, cap, slots=slots))

@@ -10,13 +10,35 @@ block-sparse operand.  Dynamic costs stay visible: fixed tile capacity
 (overflow tiles are dropped, the paper's bucket-overflow semantics) and
 the on-device pack (sort + scatter) replace static mode's free
 compile-time packing.
+
+Capacity is *planned* (paper Appendix A.2): ``repro.sparse`` sizes
+``tiles_cap`` at the planner's expected-tiles + headroom, not the safe
+worst case, so overflow is possible by design -- and therefore counted
+exactly (``GroupedPackStats``), never dropped silently.
 """
 from __future__ import annotations
+
+import warnings
+from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.dynamic_sparse import DynamicOperand
 from repro.kernels.gmm.gmm import gmm_call
+
+
+class GroupedPackStats(NamedTuple):
+    """Exact overflow accounting for one device-side pack (all fields are
+    device scalars, jit-safe).  ``tiles_total`` counts the distinct
+    non-empty tiles the runtime pattern actually occupies;
+    ``tiles_dropped``/``blocks_dropped`` are the tiles/logical-blocks
+    beyond ``tiles_cap`` (exact, not estimated); ``dropped_value_frac``
+    is the fraction of L1 value mass those dropped blocks carried."""
+
+    tiles_total: jnp.ndarray        # [] int32
+    tiles_dropped: jnp.ndarray      # [] int32
+    blocks_dropped: jnp.ndarray     # [] int32
+    dropped_value_frac: jnp.ndarray  # [] float32
 
 
 def _fit(t, pref):
@@ -40,15 +62,20 @@ def grouped_tile_size(m: int, k: int, b: int, limit: int = 128) -> int:
 
 
 def pack_tiles_device(op: DynamicOperand, *, tile: int,
-                      tiles_cap: int) -> DynamicOperand:
+                      tiles_cap: int, with_stats: bool = True
+                      ) -> Tuple[DynamicOperand, GroupedPackStats]:
     """Pack a runtime block pattern into ``tiles_cap`` dense ``tile x
     tile`` slots, entirely on device (jit-compatible, runtime indices).
 
     The device analogue of ``partitioner.plan_packing``/``pack_values``:
     blocks are sorted by their covering tile, each distinct tile gets one
     slot, and blocks sharing a tile scatter-add into it.  Tiles beyond
-    ``tiles_cap`` are dropped (fixed-bucket overflow, paper §3.3); padded
-    tile slots carry zero values at (0, 0) and contribute exactly zero.
+    ``tiles_cap`` overflow (fixed-bucket semantics, paper §3.3) -- they
+    are dropped from the product but *counted exactly* in the returned
+    ``GroupedPackStats`` (never silently); padded tile slots carry zero
+    values at (0, 0) and contribute exactly zero.  ``with_stats=False``
+    skips the accounting reductions (telemetry-off hot loops) and
+    returns ``None`` in the stats slot.
     """
     m, k = op.shape
     b = op.block_size
@@ -60,13 +87,17 @@ def pack_tiles_device(op: DynamicOperand, *, tile: int,
     mt, kt = m // t, k // t
     s = op.capacity
     tiles_cap = max(1, tiles_cap)
+    zero_i = jnp.asarray(0, jnp.int32)
     if s == 0:
         # empty operand: one zero tile at (0, 0) contributes exactly zero
-        return DynamicOperand(
+        packed = DynamicOperand(
             jnp.zeros((tiles_cap, t, t), op.values.dtype),
             jnp.zeros((tiles_cap,), jnp.int32),
             jnp.zeros((tiles_cap,), jnp.int32),
-            jnp.asarray(0, jnp.int32), (m, k), t)
+            zero_i, (m, k), t)
+        return packed, (GroupedPackStats(
+            zero_i, zero_i, zero_i, jnp.asarray(0.0, jnp.float32))
+            if with_stats else None)
 
     # padding slots (beyond op.nnz, zero values at row 0 / col 0) must
     # not claim a tile slot: send them past every real tile via a
@@ -82,9 +113,11 @@ def pack_tiles_device(op: DynamicOperand, *, tile: int,
     new_tile = vmask & jnp.concatenate(
         [jnp.ones((1,), bool), sl[1:] != sl[:-1]])
     rank = jnp.cumsum(new_tile.astype(jnp.int32)) - 1  # per distinct tile
-    num_tiles = jnp.minimum(jnp.sum(new_tile.astype(jnp.int32)), tiles_cap)
+    tiles_total = jnp.sum(new_tile.astype(jnp.int32))
+    num_tiles = jnp.minimum(tiles_total, tiles_cap)
+    kept = vmask & (rank < tiles_cap)
     # overflow + padding land in a scratch slot that is cropped afterwards
-    dst = jnp.where(vmask & (rank < tiles_cap), rank, tiles_cap)
+    dst = jnp.where(kept, rank, tiles_cap)
 
     vals = op.values[order]
     in_r = (op.row_idx[order] % rpb).astype(jnp.int32)
@@ -100,28 +133,79 @@ def pack_tiles_device(op: DynamicOperand, *, tile: int,
     tile_cols = jnp.zeros((tiles_cap + 1,), jnp.int32
                           ).at[dst].set((safe_sl % kt).astype(jnp.int32)
                                         )[:tiles_cap]
-    return DynamicOperand(tiles, tile_rows, tile_cols, num_tiles,
-                          (m, k), t)
+
+    packed = DynamicOperand(tiles, tile_rows, tile_cols, num_tiles,
+                            (m, k), t)
+    if not with_stats:
+        return packed, None
+
+    # exact overflow accounting (the paper's bucket-overflow quantity,
+    # surfaced like MoE dropped_frac instead of dropped silently)
+    dropped = vmask & ~kept
+    blocks_dropped = jnp.sum(dropped.astype(jnp.int32))
+    mass = jnp.abs(vals.astype(jnp.float32)).sum(axis=(1, 2))
+    total_mass = jnp.sum(jnp.where(vmask, mass, 0.0))
+    dropped_mass = jnp.sum(jnp.where(dropped, mass, 0.0))
+    dropped_frac = jnp.where(total_mass > 0.0,
+                             dropped_mass / jnp.maximum(total_mass, 1e-30),
+                             0.0).astype(jnp.float32)
+    stats = GroupedPackStats(tiles_total.astype(jnp.int32),
+                             (tiles_total - num_tiles).astype(jnp.int32),
+                             blocks_dropped, dropped_frac)
+    return packed, stats
+
+
+_clamp_warned: set = set()
+
+
+def clamped_tiles_cap(requested: int, m: int, k: int, tile: int,
+                      *, warn: bool = True) -> Tuple[int, bool]:
+    """Clamp a requested tile capacity into ``[1, (m/t)*(k/t)]``.
+
+    Returns ``(effective_cap, was_clamped)``.  A reduced capacity is
+    *signalled* -- warned once per (requested, grid) and reported to the
+    caller -- never applied silently (the pre-PR-3 behaviour)."""
+    mt, kt = m // tile, k // tile
+    eff = max(1, min(int(requested), mt * kt))
+    clamped = eff != int(requested)
+    if clamped and warn:
+        sig = (int(requested), mt * kt)
+        if sig not in _clamp_warned:
+            _clamp_warned.add(sig)
+            warnings.warn(
+                f"grouped_spmm: requested tiles_cap={requested} clamped "
+                f"to {eff} (tile grid {mt}x{kt} = {mt * kt} slots); the "
+                f"clamp is recorded in the plan report", stacklevel=3)
+    return eff, clamped
 
 
 def grouped_spmm(op: DynamicOperand, x, *, tile: int | None = None,
-                 tiles_cap: int | None = None, interpret: bool = False):
+                 tiles_cap: int | None = None, interpret: bool = False,
+                 return_stats: bool = False):
     """``Y = decode(op) @ X`` through device-side tile packing + the
     full-tile slot-walk kernel (the ``dynamic_grouped`` route).
 
     ``tiles_cap`` defaults to the safe worst-case bound (every slot in a
-    distinct tile); ``repro.sparse`` plans pass the expected-tiles +
-    headroom capacity from the cost model instead.
+    distinct tile); ``repro.sparse`` plans pass the planned
+    expected-tiles + headroom capacity (``planner.plan_grouped_capacity``)
+    instead.  With ``return_stats=True`` the exact overflow accounting of
+    the pack (``GroupedPackStats``) is returned alongside ``y``.
     """
     m, k = op.shape
     t = tile or grouped_tile_size(m, k, op.block_size)
     mt, kt = m // t, k // t
     if tiles_cap is None:
         tiles_cap = min(op.capacity, mt * kt)
-    tiles_cap = max(1, min(tiles_cap, mt * kt))
-    packed = pack_tiles_device(op, tile=t, tiles_cap=tiles_cap)
+    else:
+        tiles_cap, _ = clamped_tiles_cap(tiles_cap, m, k, t)
+    tiles_cap = max(1, tiles_cap)
+    packed, stats = pack_tiles_device(op, tile=t, tiles_cap=tiles_cap,
+                                      with_stats=return_stats)
     from repro.kernels.dsmm import ops as dsmm_ops
-    return dsmm_ops.dsmm(packed, x, interpret=interpret)
+    y = dsmm_ops.dsmm(packed, x, interpret=interpret)
+    if return_stats:
+        return y, stats
+    return y
 
 
 def gmm(x, w, expert_ids, *, tm: int | None = None, tf: int | None = None,

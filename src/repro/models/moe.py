@@ -86,6 +86,7 @@ def moe_apply(params, cfg, x: jax.Array) -> tuple[jax.Array, MoEMetrics]:
     from repro.sharding.rules import batch_axes, current_mesh
     m = cfg.moe
     mesh = current_mesh()
+    out = None
     if (m.impl == "shard_map" and mesh is not None
             and "model" in mesh.axis_names
             and m.num_experts % mesh.shape["model"] == 0):
@@ -94,8 +95,15 @@ def moe_apply(params, cfg, x: jax.Array) -> tuple[jax.Array, MoEMetrics]:
         for a in ba:
             dp *= mesh.shape[a]
         if ba and x.shape[0] % dp == 0:
-            return _moe_shard_map(params, cfg, x, mesh, ba)
-    return _moe_gspmd(params, cfg, x)
+            out = _moe_shard_map(params, cfg, x, mesh, ba)
+    if out is None:
+        out = _moe_gspmd(params, cfg, x)
+    y, metrics = out
+    # the routing drop is the MoE face of the paper's bucket overflow:
+    # fold it into the same capacity telemetry the dynamic_grouped plans
+    # report through (eager calls only -- no-op under tracing)
+    sparse_api.record_dropped("moe_dispatch", metrics.dropped_frac)
+    return y, metrics
 
 
 def _moe_gspmd(params, cfg, x: jax.Array) -> tuple[jax.Array, MoEMetrics]:

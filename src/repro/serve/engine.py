@@ -44,7 +44,7 @@ class Engine:
                  retained: bool = False, sample: str = "greedy",
                  dispatch_ctx: Optional[dispatch.DispatchContext] = None,
                  plan_cache_dir: Optional[str] = None,
-                 warm_plans: bool = True):
+                 warm_plans: bool = True, telemetry: bool = True):
         self.lm = lm
         self.params = params
         self.batch = batch
@@ -59,8 +59,13 @@ class Engine:
         # autotune (measured/analytic route verdicts survive serving
         # restarts via the repro.sparse disk cache); scoped to THIS
         # engine's traced programs, not process-global state
-        self.plan_ctx = sparse_api.PlanContext.from_dispatch(
-            self.dispatch_ctx)
+        # telemetry=False drops the per-call overflow recording (a host
+        # callback per planned-capacity matmul per decode step) for
+        # latency-critical deployments; plan_report() then shows only
+        # plan-time capacity verdicts, no running overflow counts
+        self.plan_ctx = dataclasses.replace(
+            sparse_api.PlanContext.from_dispatch(self.dispatch_ctx),
+            telemetry=telemetry)
         if plan_cache_dir is not None:
             self.plan_ctx = dataclasses.replace(
                 self.plan_ctx, cache_dir=plan_cache_dir, persist=True)
@@ -106,9 +111,12 @@ class Engine:
 
     def plan_report(self) -> dict:
         """Plans built at engine startup (decode program) + live cache
-        counters -- the serving view of the plan-first lifecycle."""
+        counters + aggregated capacity/overflow telemetry (per-plan
+        planned-bucket stats and MoE routing drops) -- the serving view
+        of the plan-first lifecycle."""
         return {"startup": dict(self.plan_stats),
-                "now": sparse_api.cache_stats()}
+                "now": sparse_api.cache_stats(),
+                "capacity": sparse_api.capacity_report()}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: Request) -> bool:

@@ -28,17 +28,22 @@ from repro.sparse.plan import (  # noqa: F401
     MatmulPlan,
     batched_matmul,
     cache_stats,
+    capacity_report,
     configure,
     explain,
     format_plan,
     matmul,
     plan,
+    record_dropped,
     reset,
     spmm,
     spmm_nt,
     use_ctx,
 )
 from repro.sparse.spec import (  # noqa: F401
+    CAPACITY_POLICIES,
+    ESCALATION_MIN_CALLS,
+    CapacityStats,
     OpSpec,
     PlanContext,
     PLAN_MODES,

@@ -31,7 +31,11 @@ from typing import Dict, Optional
 
 import jax
 
-SCHEMA_VERSION = 1
+# v2: decision records grew a "capacity" section (planned grouped-tile
+# bucket: tile/tiles_cap/headroom/...) and plan fingerprints grew the
+# capacity knobs -- v1 files are ignored (different file name) so a
+# pre-capacity cache can never be mis-read as a planned-capacity verdict
+SCHEMA_VERSION = 2
 
 _lock = threading.RLock()
 _configured_dir: Optional[str] = None

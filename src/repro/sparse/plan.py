@@ -39,22 +39,76 @@ import repro.core.tp as tp_lib
 from repro.core.bsr import BlockSparseMatrix
 from repro.core.dynamic_sparse import DynamicOperand, _dspmm
 from repro.sparse import cache as cache_lib
-from repro.sparse.spec import (OpSpec, PlanContext, PLAN_ROUTES,
-                               pattern_key, payload_of)
+from repro.sparse.spec import (CapacityStats, OpSpec, PlanContext,
+                               PLAN_ROUTES, pattern_key, payload_of)
 
 Operand = Union[jax.Array, np.ndarray, BlockSparseMatrix, DynamicOperand]
 
 _plan_cache: Dict[tuple, "MatmulPlan"] = {}
 _plan_lock = threading.Lock()
 
+# per-problem running overflow telemetry (keyed by the plan's persistent
+# key string, plus free-form names like "moe_dispatch"): outlives plan
+# objects so escalation survives a plan-cache eviction and the serving
+# engine can aggregate across its lifetime
+_capacity_registry: Dict[str, CapacityStats] = {}
+_capacity_lock = threading.Lock()
+
 
 def reset(*, counters: bool = True):
-    """Forget every in-memory plan, decision, and (optionally) counter.
-    Disk cache files survive -- this simulates a fresh process."""
+    """Forget every in-memory plan, decision, capacity stat, and
+    (optionally) counter.  Disk cache files survive -- this simulates a
+    fresh process."""
     with _plan_lock:
         _plan_cache.clear()
+    with _capacity_lock:
+        _capacity_registry.clear()
     cache_lib.reset(counters=counters)
     dispatch.clear_cache()
+
+
+def _capacity_stats_for(key: str, **kw) -> CapacityStats:
+    with _capacity_lock:
+        stats = _capacity_registry.get(key)
+        if stats is None:
+            stats = _capacity_registry[key] = CapacityStats(key, **kw)
+        return stats
+
+
+def capacity_report() -> dict:
+    """Aggregated overflow telemetry across every planned-capacity
+    problem this process has executed (plus free-form streams such as
+    MoE routing drops).  The serving engine folds this into
+    ``plan_report()``."""
+    with _capacity_lock:
+        per_key = {k: s.report() for k, s in _capacity_registry.items()}
+    return {
+        "per_plan": per_key,
+        "totals": {
+            "calls": sum(r["calls"] for r in per_key.values()),
+            "overflow_calls": sum(r["overflow_calls"]
+                                  for r in per_key.values()),
+            "tiles_dropped_total": sum(r["tiles_dropped_total"]
+                                       for r in per_key.values()),
+            "escalated_plans": sum(1 for r in per_key.values()
+                                   if r["escalated"]),
+        },
+    }
+
+
+def record_dropped(name: str, dropped_frac) -> None:
+    """Best-effort drop telemetry for non-plan capacity buckets (e.g.
+    MoE routing ``dropped_frac``): folds one step's dropped fraction
+    into the named ``CapacityStats`` stream.  No-op under tracing --
+    eager callers (tests, eval loops) get exact accounting, compiled
+    training steps pay nothing."""
+    if isinstance(dropped_frac, jax.core.Tracer):
+        return
+    frac = float(np.asarray(dropped_frac).max())
+    stats = _capacity_stats_for(name)
+    # fraction-only stream: no tiles/blocks -- overflow_calls still
+    # counts via frac > 0, and tile-drop totals stay uninflated
+    stats.record(0, 0, 0, frac)
 
 
 def cache_stats() -> dict:
@@ -96,6 +150,10 @@ class MatmulPlan:
     key: str                         # persistent-cache key string
     artifacts: Dict[str, Any]
     _execute: Optional[Callable] = None
+    # running overflow telemetry for planned-capacity routes (mutable by
+    # design; lives in the process-wide registry keyed by ``key`` so it
+    # survives plan-cache eviction -- see ``capacity_report``)
+    capacity_stats: Optional[CapacityStats] = None
 
     @property
     def executable(self) -> bool:
@@ -158,7 +216,19 @@ class MatmulPlan:
             "from_disk": self.from_disk,
             "cache_key": self.key,
             "plan": dict(self.artifacts, executable=self.executable),
+            "capacity": (dict(self.artifacts.get("capacity", {}),
+                              stats=self.capacity_stats.report())
+                         if self.capacity_stats is not None else
+                         self.artifacts.get("capacity")),
         }
+
+    def capacity_report(self) -> Optional[dict]:
+        """Planned capacity + running overflow stats for this plan
+        (None for routes without a planned bucket)."""
+        if self.capacity_stats is None:
+            return None
+        return dict(self.artifacts.get("capacity", {}),
+                    stats=self.capacity_stats.report())
 
 
 def format_plan(plan: MatmulPlan) -> str:
@@ -178,9 +248,22 @@ def format_plan(plan: MatmulPlan) -> str:
                      f"'{art['tp_axis']}'")
     if "grouped_tile" in art:
         t = art["grouped_tile"]
-        cap = art.get("grouped_tiles_cap")   # exact only for static kind
+        cap = art.get("grouped_tiles_cap")   # exact for static kind
         extra.append(f"grouped: {t}x{t} tile slots"
                      + (f" (cap {cap})" if cap is not None else ""))
+    capsec = art.get("capacity")
+    if capsec:
+        extra.append(
+            f"capacity: {capsec['policy']} cap {capsec['tiles_cap']} "
+            f"(E[tiles] {capsec['expected_tiles']:.0f} x headroom "
+            f"{capsec['headroom']:.2f}, worst {capsec['worst_tiles']}, "
+            f"P[overflow] {capsec['overflow_p']:.3f})"
+            + (" [clamped]" if capsec.get("clamped") else ""))
+        if plan.capacity_stats is not None and plan.capacity_stats.calls:
+            s = plan.capacity_stats
+            extra.append(f"overflow: {s.overflow_calls}/{s.calls} calls, "
+                         f"{s.tiles_dropped_total} tiles dropped"
+                         + (" [escalated]" if s.escalated else ""))
     if extra:
         lines.append("   plan: " + "; ".join(extra))
     lines.append(f"   ({'disk-cached' if plan.from_disk else 'planned'} "
@@ -199,7 +282,16 @@ def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
                                dctx)
     q = ctx.resolved_tp_q()
     tp = ("tp", q, ctx.tp_axis) if q else ()
-    return ("plan", spec.op, spec.mode) + base + tp
+    # capacity *sizing* is part of the plan identity for dynamic
+    # problems: a plan built at headroom 1.25 must not answer for
+    # headroom 2.0.  The runtime-only knobs (overflow_threshold,
+    # telemetry) deliberately stay OUT of this fingerprint -- they do
+    # not change the route or the bucket, and splitting the disk key on
+    # them would re-measure on restart whenever an operator toggles
+    # them; they key the in-memory plan cache instead (see plan()).
+    cap = (("cap", ctx.resolved_headroom(), ctx.capacity_policy)
+           if spec.kind == "dynamic" else ())
+    return ("plan", spec.op, spec.mode) + base + tp + cap
 
 
 def _tp_estimate(spec: OpSpec, q: int) -> float:
@@ -215,8 +307,10 @@ def _tp_estimate(spec: OpSpec, q: int) -> float:
 
 
 def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
-            x) -> Tuple[str, Dict[str, float], str, bool]:
-    """-> (route, est_seconds, source, from_disk)."""
+            x) -> Tuple[str, Dict[str, float], str, bool, Optional[dict]]:
+    """-> (route, est_seconds, source, from_disk, disk_capacity).
+    The verdict is persisted by ``plan()`` (one store, after the
+    executor -- and its capacity section -- are built)."""
     dctx = ctx.dispatch_ctx()
     key = cache_lib.key_string(_fingerprint(spec, ctx))
     use_disk = ctx.cache and ctx.persistence_on()
@@ -224,7 +318,8 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
         rec = cache_lib.load_decision(ctx.resolved_cache_dir(), key)
         if rec is not None and rec.get("route") in PLAN_ROUTES:
             return (rec["route"], dict(rec.get("est_seconds", {})),
-                    rec.get("source", "analytic"), True)
+                    rec.get("source", "analytic"), True,
+                    rec.get("capacity"))
 
     cache_lib.bump("decisions")
     q = ctx.resolved_tp_q()
@@ -265,12 +360,7 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
         if est["static_tp"] < est[route]:
             route = "static_tp"
 
-    if use_disk:
-        cache_lib.store_decision(
-            ctx.resolved_cache_dir(), key,
-            {"route": route, "source": source,
-             "est_seconds": {r: float(s) for r, s in est.items()}})
-    return route, est, source, False
+    return route, est, source, False, None
 
 
 # ---------------------------------------------------------------------------
@@ -360,7 +450,21 @@ def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
     raise ValueError(f"unknown static route {route!r}")
 
 
-def _dynamic_executor(spec: OpSpec, route: str, ctx: PlanContext):
+def _record_pack_stats(stats: CapacityStats, st) -> None:
+    """Fold one pack's exact overflow accounting into the running stats.
+    Concrete values record directly (eager calls); traced values go
+    through ``jax.debug.callback`` so jitted programs (the serving
+    engine's decode loop) still report."""
+    leaves = (st.tiles_total, st.tiles_dropped, st.blocks_dropped,
+              st.dropped_value_frac)
+    if any(isinstance(v, jax.core.Tracer) for v in leaves):
+        jax.debug.callback(stats.record, *leaves)
+    else:
+        stats.record(*leaves)
+
+
+def _dynamic_executor(spec: OpSpec, route: str, ctx: PlanContext,
+                      key: str, disk_capacity: Optional[dict] = None):
     m, k, b = spec.m, spec.k, spec.block_size
     mb = m // b
     interpret = ctx.interpret
@@ -380,12 +484,53 @@ def _dynamic_executor(spec: OpSpec, route: str, ctx: PlanContext):
     if route == "dynamic_grouped":
         from repro.kernels.gmm import ops as gmm_ops
         t = gmm_ops.grouped_tile_size(m, k, b)
-        # runtime pattern: keep the safe worst-case tile capacity (no
-        # silent overflow drops); the paper-style planned bucket stays
-        # in the artifacts for reporting
-        art.update(grouped_tile=t)
-        return (lambda op, x: gmm_ops.grouped_spmm(
-            op, x, tile=t, interpret=interpret)), art
+        # planned capacity (paper §3.3 bucket sizing): expected distinct
+        # tiles at d_max, times the headroom knob -- NOT the safe worst
+        # case.  Overflow is possible by design and counted exactly.
+        slots = planner_lib.nnz_max_blocks(m, k, b, spec.density)
+        capplan = planner_lib.plan_grouped_capacity(
+            m, k, b, spec.density, tile=t, slots=slots,
+            headroom=ctx.resolved_headroom())
+        stats = _capacity_stats_for(
+            key, tiles_cap=capplan.tiles_cap,
+            worst_tiles=capplan.worst_tiles,
+            overflow_threshold=ctx.overflow_threshold)
+        stats.overflow_threshold = ctx.overflow_threshold
+        # a persisted escalation (disk record at policy "worst") carries
+        # across restarts: the guardrail's verdict is part of the plan,
+        # not just process state
+        if disk_capacity is not None and \
+                disk_capacity.get("policy") == "worst":
+            stats.escalated = True
+        # guardrail: an escalated problem (observed overflow frequency
+        # above ctx.overflow_threshold) re-plans at worst-case capacity
+        policy = ("worst" if (ctx.capacity_policy == "worst"
+                              or stats.escalated) else "planned")
+        requested = (capplan.tiles_cap if policy == "planned"
+                     else capplan.worst_tiles)
+        cap, clamped = gmm_ops.clamped_tiles_cap(requested, m, k, t,
+                                                 warn=False)
+        stats.tiles_cap = cap
+        stats.worst_tiles = capplan.worst_tiles
+        stats.clamped = stats.clamped or clamped
+        telemetry = ctx.telemetry
+        art.update(grouped_tile=t, grouped_tiles_cap=cap,
+                   capacity=dict(capplan.as_dict(), policy=policy,
+                                 tiles_cap=cap, clamped=clamped,
+                                 escalated=stats.escalated),
+                   _capacity_stats=stats)
+
+        def run(op, x):
+            if not telemetry:        # skip the accounting reductions
+                return gmm_ops.grouped_spmm(op, x, tile=t,
+                                            tiles_cap=cap,
+                                            interpret=interpret)
+            y, st = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=cap,
+                                         interpret=interpret,
+                                         return_stats=True)
+            _record_pack_stats(stats, st)
+            return y
+        return run, art
     if route in ("dense_xla", "dense_pallas"):
         pallas = route == "dense_pallas"
         return (lambda op, x: _promote_matmul(op.to_dense(), x,
@@ -422,13 +567,14 @@ def _dense_executor(spec: OpSpec, route: str, ctx: PlanContext):
 
 
 def _build_executor(spec: OpSpec, route: str, ctx: PlanContext,
-                    operand: Optional[Operand]):
+                    operand: Optional[Operand], key: str,
+                    disk_capacity: Optional[dict] = None):
     if spec.kind == "static":
         if operand is None or not isinstance(operand, BlockSparseMatrix):
             return None, {}          # spec-only static plan: report-only
         return _static_executor(spec, route, ctx, operand)
     if spec.kind == "dynamic":
-        return _dynamic_executor(spec, route, ctx)
+        return _dynamic_executor(spec, route, ctx, key, disk_capacity)
     return _dense_executor(spec, route, ctx)
 
 
@@ -495,23 +641,73 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
     # request (which still needs to write/read the disk cache)
     persist_key = (ctx.resolved_cache_dir() if ctx.persistence_on()
                    else None)
-    mem_key = (fp, pkey, persist_key)
+    # runtime-only capacity knobs key the in-memory cache (a plan with
+    # telemetry/guardrail off must not be satisfied by one built with
+    # them on) but not the disk fingerprint -- see _fingerprint
+    mem_key = (fp, pkey, persist_key,
+               ctx.overflow_threshold, ctx.telemetry)
     if ctx.cache:
         hit = _plan_cache.get(mem_key)
         if hit is not None:
             cache_lib.bump("plan_hits")
             return hit
 
-    route, est, source, from_disk = _decide(spec, ctx, operand, x)
-    execute, artifacts = _build_executor(spec, route, ctx, operand)
+    route, est, source, from_disk, disk_cap = _decide(spec, ctx,
+                                                      operand, x)
+    key_str = cache_lib.key_string(fp)
+    execute, artifacts = _build_executor(spec, route, ctx, operand,
+                                         key_str, disk_cap)
+    stats = artifacts.pop("_capacity_stats", None)
     p = MatmulPlan(spec=spec, route=route, source=source,
                    est_seconds=est, from_disk=from_disk, ctx=ctx,
-                   key=cache_lib.key_string(fp), artifacts=artifacts,
-                   _execute=execute)
+                   key=key_str, artifacts=artifacts,
+                   _execute=execute, capacity_stats=stats)
     cache_lib.bump("plans_built")
+
+    # persist the verdict once, with the capacity/headroom section when
+    # the route has a planned bucket -- so restarted processes allocate
+    # the identical bucket (including an escalated policy="worst"
+    # verdict).  store_decision short-circuits identical records, so a
+    # disk-hit rebuild writes nothing.
+    if ctx.cache and ctx.persistence_on():
+        rec = {"route": route, "source": source,
+               "est_seconds": {r: float(s) for r, s in est.items()}}
+        if "capacity" in artifacts:
+            rec["capacity"] = {k2: v for k2, v in
+                               artifacts["capacity"].items()
+                               if k2 != "escalated"}
+        cache_lib.store_decision(ctx.resolved_cache_dir(), key_str, rec)
+
     if ctx.cache:
         with _plan_lock:
             p = _plan_cache.setdefault(mem_key, p)
+        if stats is not None and p.capacity_stats is stats:
+            # guardrail plumbing: when observed overflow trips the
+            # threshold, evict this plan so the next plan() re-plans at
+            # worst-case capacity (already-compiled closures keep the
+            # planned bucket -- escalation applies to new traces), and
+            # persist the escalated verdict NOW -- a long-lived holder
+            # of the plan (the serving engine) may never call plan()
+            # again in this process, but the restart must see "worst"
+            esc_rec = None
+            if ctx.persistence_on() and "capacity" in artifacts:
+                cap_art = {k2: v for k2, v in
+                           artifacts["capacity"].items()
+                           if k2 != "escalated"}
+                cap_art["policy"] = "worst"
+                cap_art["tiles_cap"] = cap_art["worst_tiles"]
+                esc_rec = {"route": route, "source": source,
+                           "est_seconds": {r: float(s)
+                                           for r, s in est.items()},
+                           "capacity": cap_art}
+            esc_dir = ctx.resolved_cache_dir()
+
+            def _escalate_trip():
+                with _plan_lock:
+                    _plan_cache.pop(mem_key, None)
+                if esc_rec is not None:
+                    cache_lib.store_decision(esc_dir, key_str, esc_rec)
+            stats._on_escalate = _escalate_trip
     return p
 
 

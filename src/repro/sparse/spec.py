@@ -17,12 +17,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import Any, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 import repro.core.dispatch as dispatch
+import repro.core.planner as planner_lib
 from repro.core.bsr import BlockSparseMatrix
 from repro.core.dynamic_sparse import DynamicOperand
 
@@ -91,6 +93,109 @@ def _default_cache_dir() -> Optional[str]:
     return os.environ.get("REPRO_CACHE_DIR") or None
 
 
+# ---------------------------------------------------------------------------
+# Capacity: planned bucket sizing + running overflow telemetry
+# ---------------------------------------------------------------------------
+
+CAPACITY_POLICIES = ("planned", "worst")
+
+# the guardrail needs a frequency *estimate*, not a single sample: never
+# escalate before this many observed calls (otherwise one unlucky
+# overflow on call 1 reads as frequency 1.0 and permanently forfeits the
+# planned-capacity win)
+ESCALATION_MIN_CALLS = 4
+
+
+class CapacityStats:
+    """Running overflow telemetry for one planned-capacity problem.
+
+    Mutable by design (the one deliberately stateful part of a frozen
+    ``MatmulPlan``): every execution of a planned-capacity route records
+    its *exact* pack overflow here -- the observable analogue of MoE's
+    per-step ``dropped_frac``.  The stats outlive plan objects (they are
+    registered per plan key), so the escalation guardrail survives a
+    plan-cache eviction and ``serve.Engine.plan_report()`` can aggregate
+    them across the engine's lifetime.
+    """
+
+    def __init__(self, key: str = "", *, tiles_cap: int = 0,
+                 worst_tiles: int = 0, overflow_threshold: float = 0.0):
+        self.key = key
+        self.tiles_cap = tiles_cap
+        self.worst_tiles = worst_tiles
+        self.overflow_threshold = overflow_threshold
+        self.calls = 0
+        self.overflow_calls = 0
+        self.tiles_dropped_total = 0
+        self.blocks_dropped_total = 0
+        self.dropped_frac_sum = 0.0
+        self.max_dropped_frac = 0.0
+        self.last_tiles_total = 0
+        self.last_tiles_dropped = 0
+        self.clamped = False          # requested cap was reduced to fit
+        self.escalated = False        # guardrail tripped -> worst case
+        self._lock = threading.Lock()
+        self._on_escalate = None      # set by the plan layer
+
+    def record(self, tiles_total, tiles_dropped, blocks_dropped,
+               dropped_frac) -> None:
+        """Fold one execution's exact pack accounting into the running
+        stats; trips the escalation guardrail when the observed overflow
+        frequency exceeds ``overflow_threshold``."""
+        tiles_total = int(np.asarray(tiles_total).sum())
+        tiles_dropped = int(np.asarray(tiles_dropped).sum())
+        blocks_dropped = int(np.asarray(blocks_dropped).sum())
+        dropped_frac = float(np.asarray(dropped_frac).max())
+        trip = None
+        with self._lock:
+            self.calls += 1
+            self.last_tiles_total = tiles_total
+            self.last_tiles_dropped = tiles_dropped
+            # a call overflowed if it dropped tiles OR value mass (the
+            # latter covers fraction-only streams like MoE routing
+            # drops, which have no tile notion)
+            if tiles_dropped > 0 or dropped_frac > 0:
+                self.overflow_calls += 1
+            self.tiles_dropped_total += tiles_dropped
+            self.blocks_dropped_total += blocks_dropped
+            self.dropped_frac_sum += dropped_frac
+            self.max_dropped_frac = max(self.max_dropped_frac,
+                                        dropped_frac)
+            if (not self.escalated
+                    and self.overflow_threshold > 0.0
+                    and self.calls >= ESCALATION_MIN_CALLS
+                    and self.overflow_frequency > self.overflow_threshold):
+                self.escalated = True
+                trip = self._on_escalate
+        if trip is not None:
+            trip()
+
+    @property
+    def overflow_frequency(self) -> float:
+        return self.overflow_calls / self.calls if self.calls else 0.0
+
+    @property
+    def mean_dropped_frac(self) -> float:
+        return self.dropped_frac_sum / self.calls if self.calls else 0.0
+
+    def report(self) -> dict:
+        with self._lock:
+            return {"tiles_cap": self.tiles_cap,
+                    "worst_tiles": self.worst_tiles,
+                    "calls": self.calls,
+                    "overflow_calls": self.overflow_calls,
+                    "overflow_frequency": round(self.overflow_frequency, 6),
+                    "tiles_dropped_total": self.tiles_dropped_total,
+                    "blocks_dropped_total": self.blocks_dropped_total,
+                    "mean_dropped_frac": round(self.mean_dropped_frac, 6),
+                    "max_dropped_frac": round(self.max_dropped_frac, 6),
+                    "last_tiles_total": self.last_tiles_total,
+                    "last_tiles_dropped": self.last_tiles_dropped,
+                    "clamped": self.clamped,
+                    "escalated": self.escalated,
+                    "overflow_threshold": self.overflow_threshold}
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanContext:
     """Planning policy for ``repro.sparse.plan``.
@@ -112,6 +217,24 @@ class PlanContext:
                 real multi-device mesh).
     units       parallel-unit budget for ``planner.plan_dynamic`` bucket
                 sizing.
+
+    Capacity policy (the ``dynamic_grouped`` planned-bucket knobs, paper
+    §3.3 / Appendix A.2):
+
+    headroom            multiplicative slack over the expected tile count
+                        when sizing the grouped tile bucket.  None (the
+                        default) uses ``planner.HEADROOM`` (1.25).
+    capacity_policy     "planned" sizes the bucket at expected*headroom
+                        (overflow possible, counted exactly); "worst"
+                        keeps the pre-planned safe worst case (never
+                        overflows -- the escalation target).
+    overflow_threshold  observed overflow *frequency* above which the
+                        guardrail escalates the plan to worst-case
+                        capacity (evicts it from the plan cache so the
+                        next ``plan()`` re-plans).  0 disables.
+    telemetry           record per-call pack overflow into the plan's
+                        ``CapacityStats`` (a host callback per call --
+                        on by default; turn off for benchmark loops).
     """
 
     mode: str = "auto"
@@ -126,11 +249,26 @@ class PlanContext:
     tp_axis: str = "model"
     tp_q: Optional[int] = None
     units: int = 16
+    headroom: Optional[float] = None
+    capacity_policy: str = "planned"
+    overflow_threshold: float = 0.25
+    telemetry: bool = True
 
     def __post_init__(self):
         if self.mode not in PLAN_MODES:
             raise ValueError(f"unknown plan mode {self.mode!r}; expected "
                              f"one of {PLAN_MODES}")
+        if self.capacity_policy not in CAPACITY_POLICIES:
+            raise ValueError(
+                f"unknown capacity_policy {self.capacity_policy!r}; "
+                f"expected one of {CAPACITY_POLICIES}")
+        if self.headroom is not None and self.headroom <= 0:
+            raise ValueError(f"headroom must be positive, got "
+                             f"{self.headroom}")
+
+    def resolved_headroom(self) -> float:
+        return float(self.headroom if self.headroom is not None
+                     else planner_lib.HEADROOM)
 
     @classmethod
     def from_dispatch(cls, ctx: dispatch.DispatchContext) -> "PlanContext":

@@ -1,0 +1,444 @@
+"""Planned-capacity grouped dynamic SpMM: overflow contract + statistics.
+
+The dynamic_grouped route sizes its tile bucket the paper's way
+(expected tiles x headroom, §3.3 / Appendix A.2) instead of the safe
+worst case, so overflow is *possible by design* and must be (a) exact --
+never silent -- and (b) statistically consistent with the planner's
+analytic expectation.  Everything here is interpret-mode Pallas / pure
+jnp packing on small shapes: fast tier.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import dynamic_sparse as dsp, masks, planner
+from repro.core.bsr import BlockSparseMatrix
+from repro.kernels.gmm import ops as gmm_ops
+
+M = K = 512
+N = 32
+
+
+@pytest.fixture(autouse=True)
+def _fresh_state():
+    sparse.reset()
+    sparse.configure(None)
+    yield
+    sparse.reset()
+    sparse.configure(None)
+
+
+def _operand(seed, m=M, k=K, b=16, d=1 / 32, pad=4):
+    bsr = BlockSparseMatrix.random(jax.random.PRNGKey(seed), m, k, b, d,
+                                   pattern_seed=seed)
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + pad)
+    return bsr, op
+
+
+def _distinct_tiles(bsr, tile):
+    """Host-side ground truth: distinct non-empty (tile x tile) tiles."""
+    rpb = tile // bsr.block_size
+    kt = bsr.shape[1] // tile
+    lin = (np.asarray(bsr.row_idx) // rpb) * kt + \
+        (np.asarray(bsr.col_idx) // rpb)
+    return np.unique(lin)
+
+
+def _pack(op, tile, cap):
+    packed, st = gmm_ops.pack_tiles_device(op, tile=tile, tiles_cap=cap)
+    return packed, {k: np.asarray(v) for k, v in st._asdict().items()}
+
+
+# -- overflow contract: exact counts, never silent ----------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("b,d", [(16, 1 / 16), (16, 1 / 32), (32, 1 / 8)])
+@pytest.mark.parametrize("headroom", [0.6, 1.0, 1.5])
+def test_capacity_sweep_exact_counts_and_equality(seed, b, d, headroom):
+    """(density x block x headroom) sweep: reported overflow is exact
+    (== host ground truth), and zero reported overflow implies exact
+    equality with the dense reference."""
+    bsr, op = _operand(seed, b=b, d=d)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 50), (K, N))
+    t = gmm_ops.grouped_tile_size(M, K, b)
+    true_tiles = _distinct_tiles(bsr, t)
+    cp = planner.plan_grouped_capacity(M, K, b, bsr.density, tile=t,
+                                       slots=op.capacity,
+                                       headroom=headroom)
+    y, st = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=cp.tiles_cap,
+                                 interpret=True, return_stats=True)
+    st = {k: np.asarray(v) for k, v in st._asdict().items()}
+    assert st["tiles_total"] == len(true_tiles)
+    expect_drop = max(0, len(true_tiles) - cp.tiles_cap)
+    assert st["tiles_dropped"] == expect_drop
+    if expect_drop == 0:
+        assert st["blocks_dropped"] == 0 and st["dropped_value_frac"] == 0
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(jnp.asarray(bsr.to_dense()) @ x),
+            rtol=1e-4, atol=1e-4)
+    else:
+        assert st["blocks_dropped"] > 0
+        assert 0.0 < st["dropped_value_frac"] <= 1.0
+
+
+@pytest.mark.parametrize("b", [16, 32])
+def test_capacity_one_keeps_exactly_first_tile(b):
+    """Property: tiles_cap=1 keeps exactly the lowest-index tile and
+    reports every other tile/block as dropped -- exact counts."""
+    bsr, op = _operand(7, b=b, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(8), (K, N))
+    t = gmm_ops.grouped_tile_size(M, K, b)
+    true_tiles = _distinct_tiles(bsr, t)
+    y, st = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=1,
+                                 interpret=True, return_stats=True)
+    st = {k: np.asarray(v) for k, v in st._asdict().items()}
+    assert st["tiles_total"] == len(true_tiles)
+    assert st["tiles_dropped"] == len(true_tiles) - 1
+    # the kept tile is the first in linearized order; reference = dense
+    # product of only that tile's blocks
+    rpb = t // b
+    kt = K // t
+    lin = (np.asarray(bsr.row_idx) // rpb) * kt + \
+        (np.asarray(bsr.col_idx) // rpb)
+    keep = lin == true_tiles[0]
+    assert st["blocks_dropped"] == int((~keep).sum())
+    kept = BlockSparseMatrix(
+        np.asarray(bsr.values)[keep],
+        np.asarray(bsr.row_idx)[keep].astype(np.int32),
+        np.asarray(bsr.col_idx)[keep].astype(np.int32), bsr.shape, b)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.asarray(kept.to_dense()) @ x),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_capacity_at_least_worst_case_never_drops():
+    bsr, op = _operand(3, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(4), (K, N))
+    t = gmm_ops.grouped_tile_size(M, K, 16)
+    mt_kt = (M // t) * (K // t)
+    y, st = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=mt_kt,
+                                 interpret=True, return_stats=True)
+    st = {k: np.asarray(v) for k, v in st._asdict().items()}
+    assert st["tiles_dropped"] == 0 and st["blocks_dropped"] == 0
+    assert st["dropped_value_frac"] == 0.0
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.asarray(bsr.to_dense()) @ x),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_empty_operand_zero_output_zero_stats():
+    op = dsp.DynamicOperand(jnp.zeros((0, 16, 16)),
+                            jnp.zeros((0,), jnp.int32),
+                            jnp.zeros((0,), jnp.int32),
+                            jnp.asarray(0, jnp.int32), (128, 128), 16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 8))
+    y, st = gmm_ops.grouped_spmm(op, x, interpret=True, return_stats=True)
+    st = {k: np.asarray(v) for k, v in st._asdict().items()}
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=0.0)
+    assert all(st[k] == 0 for k in st)
+
+
+def test_all_dense_operand_planned_cap_is_worst_and_exact():
+    """d_max = 1: the planner's expected tiles == the full grid, so the
+    planned capacity degenerates to the worst case and nothing drops."""
+    m = k = 256
+    b = 16
+    bsr, op = _operand(5, m=m, k=k, b=b, d=1.0, pad=0)
+    x = jax.random.normal(jax.random.PRNGKey(6), (k, 16))
+    t = gmm_ops.grouped_tile_size(m, k, b)
+    cp = planner.plan_grouped_capacity(m, k, b, 1.0, tile=t,
+                                       slots=op.capacity)
+    assert cp.tiles_cap == cp.worst_tiles == (m // t) * (k // t)
+    assert cp.overflow_p == 0.0
+    y, st = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=cp.tiles_cap,
+                                 interpret=True, return_stats=True)
+    st = {kk: np.asarray(v) for kk, v in st._asdict().items()}
+    assert st["tiles_dropped"] == 0
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.asarray(bsr.to_dense()) @ x),
+        rtol=1e-4, atol=1e-4)
+
+
+# -- statistics: observed overflow vs the planner's analytic expectation ------
+
+N_SEEDS = 40
+STAT_B, STAT_D = 16, 1 / 32
+
+
+def _overflow_trials(headroom):
+    """Pack N_SEEDS random patterns at the planned capacity; return
+    (cap, analytic plan, per-seed (tiles_total, tiles_dropped))."""
+    t = gmm_ops.grouped_tile_size(M, K, STAT_B)
+    slots = planner.nnz_max_blocks(M, K, STAT_B, STAT_D)
+    cp = planner.plan_grouped_capacity(M, K, STAT_B, STAT_D, tile=t,
+                                       slots=slots, headroom=headroom)
+    out = []
+    for seed in range(N_SEEDS):
+        bsr, op = _operand(seed, b=STAT_B, d=STAT_D, pad=2)
+        _, st = _pack(op, t, cp.tiles_cap)
+        true_tiles = _distinct_tiles(bsr, t)
+        assert st["tiles_total"] == len(true_tiles)        # exact, always
+        assert st["tiles_dropped"] == max(
+            0, len(true_tiles) - cp.tiles_cap)
+        out.append((int(st["tiles_total"]), int(st["tiles_dropped"])))
+    return cp, out
+
+
+def test_observed_tile_count_matches_analytic_expectation():
+    """Mean observed distinct-tile count over seeds tracks the planner's
+    E[tiles] (the quantity the whole capacity plan is sized from)."""
+    cp, trials = _overflow_trials(headroom=1.0)
+    mean_tiles = np.mean([t for t, _ in trials])
+    assert abs(mean_tiles - cp.expected_tiles) / cp.expected_tiles < 0.15
+
+
+@pytest.mark.parametrize("headroom,band", [
+    (1.25, (0.0, 0.25)),     # cap == grid here: overflow impossible
+    (0.8, (0.6, 1.0)),       # analytic P[overflow] ~ 0.9: nearly always
+])
+def test_overflow_frequency_consistent_with_planner(headroom, band):
+    cp, trials = _overflow_trials(headroom=headroom)
+    freq = np.mean([1.0 if d > 0 else 0.0 for _, d in trials])
+    lo, hi = band
+    assert lo <= freq <= hi, (
+        f"observed overflow frequency {freq} outside [{lo}, {hi}] "
+        f"(analytic P[overflow]={cp.overflow_p}, cap={cp.tiles_cap}, "
+        f"E[tiles]={cp.expected_tiles})")
+    # the analytic probability must sit on the same side of 0.5 as the
+    # observed frequency (the planner's model is a usable risk signal)
+    if cp.overflow_p < 0.05:
+        assert freq <= 0.25
+    if cp.overflow_p > 0.95:
+        assert freq >= 0.75
+
+
+def test_overflow_probability_monotone_in_headroom():
+    t = gmm_ops.grouped_tile_size(M, K, STAT_B)
+    ps = [planner.plan_grouped_capacity(M, K, STAT_B, STAT_D, tile=t,
+                                        headroom=h).overflow_p
+          for h in (0.6, 0.8, 1.0, 1.25, 1.5)]
+    assert all(a >= b for a, b in zip(ps, ps[1:]))
+
+
+# -- plan layer: telemetry, guardrail, clamp signalling -----------------------
+
+def test_plan_records_exact_overflow_and_engine_report_matches():
+    """The per-plan running stats (and the engine-facing aggregate
+    ``sparse.capacity_report``) carry the same exact counts the kernel
+    reports."""
+    bsr, op = _operand(11, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(12), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             headroom=0.5, overflow_threshold=0.0)
+    p = sparse.plan(op, N, ctx=ctx)
+    t = p.artifacts["grouped_tile"]
+    cap = p.artifacts["grouped_tiles_cap"]
+    true_tiles = _distinct_tiles(bsr, t)
+    per_call_drop = max(0, len(true_tiles) - cap)
+    assert per_call_drop > 0                  # headroom 0.5 must overflow
+    for _ in range(3):
+        p(op, x)
+    s = p.capacity_stats.report()
+    assert s["calls"] == 3
+    assert s["overflow_calls"] == 3
+    assert s["last_tiles_total"] == len(true_tiles)
+    assert s["last_tiles_dropped"] == per_call_drop
+    assert s["tiles_dropped_total"] == 3 * per_call_drop
+    # the serving engine aggregates exactly this (plan_report "capacity")
+    agg = sparse.capacity_report()
+    assert agg["per_plan"][p.key] == s
+    assert agg["totals"]["tiles_dropped_total"] == 3 * per_call_drop
+
+
+def test_guardrail_escalates_to_worst_case_replan():
+    bsr, op = _operand(13, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(14), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             headroom=0.5, overflow_threshold=0.25)
+    p1 = sparse.plan(op, N, ctx=ctx)
+    assert p1.artifacts["capacity"]["policy"] == "planned"
+    # one overflow is not a frequency estimate: the guardrail needs at
+    # least ESCALATION_MIN_CALLS observations before it may trip
+    for i in range(sparse.ESCALATION_MIN_CALLS):
+        p1(op, x)
+        assert p1.capacity_stats.escalated == (
+            i + 1 >= sparse.ESCALATION_MIN_CALLS)
+    p2 = sparse.plan(op, N, ctx=ctx)          # re-plan: worst case now
+    assert p2 is not p1
+    assert p2.artifacts["capacity"]["policy"] == "worst"
+    assert (p2.artifacts["grouped_tiles_cap"]
+            == p2.artifacts["capacity"]["worst_tiles"])
+    np.testing.assert_allclose(
+        np.asarray(p2(op, x)),
+        np.asarray(jnp.asarray(bsr.to_dense()) @ x), rtol=1e-4, atol=1e-4)
+    s = p2.capacity_stats.report()            # same stats stream
+    assert s["escalated"]
+    assert s["calls"] == sparse.ESCALATION_MIN_CALLS + 1
+
+
+def test_escalation_persists_across_restart(tmp_path):
+    """An escalated (policy='worst') verdict is part of the persisted
+    plan: a restarted process allocates the worst-case bucket, not the
+    overflowing planned one."""
+    bsr, op = _operand(29, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(30), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             headroom=0.5, overflow_threshold=0.25,
+                             cache_dir=str(tmp_path))
+    p1 = sparse.plan(op, N, ctx=ctx)
+    for _ in range(sparse.ESCALATION_MIN_CALLS):
+        p1(op, x)                             # overflow -> escalate
+    assert p1.capacity_stats.escalated
+    p2 = sparse.plan(op, N, ctx=ctx)          # re-plan + persist "worst"
+    assert p2.artifacts["capacity"]["policy"] == "worst"
+    sparse.reset()                            # fresh-process simulation
+    p3 = sparse.plan(op, N, ctx=ctx)
+    assert p3.from_disk
+    assert p3.artifacts["capacity"]["policy"] == "worst"
+    np.testing.assert_allclose(
+        np.asarray(p3(op, x)),
+        np.asarray(jnp.asarray(bsr.to_dense()) @ x), rtol=1e-4, atol=1e-4)
+
+
+def test_escalation_trip_persists_without_replan(tmp_path):
+    """The serving scenario: the engine holds its plan and never calls
+    plan() again -- the guardrail trip itself must write the escalated
+    verdict to disk."""
+    import json, os
+    bsr, op = _operand(33, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(34), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             headroom=0.5, overflow_threshold=0.25,
+                             cache_dir=str(tmp_path))
+    p1 = sparse.plan(op, N, ctx=ctx)
+    for _ in range(sparse.ESCALATION_MIN_CALLS):
+        p1(op, x)                             # trips the guardrail
+    assert p1.capacity_stats.escalated
+    path = os.path.join(str(tmp_path),
+                        f"sparse-plans-v{sparse.SCHEMA_VERSION}.json")
+    rec = json.load(open(path))["entries"][p1.key]
+    assert rec["capacity"]["policy"] == "worst"
+    assert rec["capacity"]["tiles_cap"] == rec["capacity"]["worst_tiles"]
+    sparse.reset()                            # restart without re-plan
+    p2 = sparse.plan(op, N, ctx=ctx)
+    assert p2.from_disk
+    assert p2.artifacts["capacity"]["policy"] == "worst"
+
+
+def test_overflow_threshold_and_telemetry_in_plan_identity():
+    """Turning the guardrail or telemetry off must not be satisfied by
+    a cached plan built with them on -- but these runtime-only knobs
+    must NOT split the persistent (disk) key, or restarts would
+    re-measure whenever an operator toggles them."""
+    _, op = _operand(31, d=1 / 16)
+    base = sparse.PlanContext(mode="dynamic_grouped", interpret=True)
+    p1 = sparse.plan(op, N, ctx=base)
+    p2 = sparse.plan(op, N, ctx=dataclasses.replace(
+        base, overflow_threshold=0.0))
+    p3 = sparse.plan(op, N, ctx=dataclasses.replace(
+        base, telemetry=False))
+    assert p1 is not p2 and p1 is not p3      # distinct in-memory plans
+    assert p1.key == p2.key == p3.key         # shared disk identity
+
+
+def test_capacity_policy_worst_never_overflows():
+    bsr, op = _operand(15, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(16), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             capacity_policy="worst")
+    p = sparse.plan(op, N, ctx=ctx)
+    np.testing.assert_allclose(
+        np.asarray(p(op, x)),
+        np.asarray(jnp.asarray(bsr.to_dense()) @ x), rtol=1e-4, atol=1e-4)
+    assert p.capacity_stats.report()["overflow_calls"] == 0
+
+
+def test_telemetry_works_under_jit():
+    _, op = _operand(17, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(18), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             headroom=0.5, overflow_threshold=0.0)
+    p = sparse.plan(op, N, ctx=ctx)
+    f = jax.jit(lambda o, xx: p(o, xx))
+    f(op, x).block_until_ready()
+    f(op, x).block_until_ready()
+    assert p.capacity_stats.calls == 2
+    assert p.capacity_stats.tiles_dropped_total > 0
+
+
+def test_telemetry_off_records_nothing():
+    _, op = _operand(19, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(20), (K, N))
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             headroom=0.5, telemetry=False,
+                             overflow_threshold=0.0)
+    p = sparse.plan(op, N, ctx=ctx)
+    p(op, x)
+    assert p.capacity_stats.calls == 0
+
+
+def test_headroom_is_part_of_plan_identity():
+    _, op = _operand(21, d=1 / 16)
+    p1 = sparse.plan(op, N, ctx=sparse.PlanContext(
+        mode="dynamic_grouped", interpret=True, headroom=1.25))
+    p2 = sparse.plan(op, N, ctx=sparse.PlanContext(
+        mode="dynamic_grouped", interpret=True, headroom=2.0))
+    assert p1 is not p2 and p1.key != p2.key
+
+
+def test_clamp_is_warned_once_and_signalled():
+    """Satellite fix: a reduced tiles_cap is never applied silently."""
+    _, op = _operand(23, d=1 / 16)
+    x = jax.random.normal(jax.random.PRNGKey(24), (K, N))
+    t = gmm_ops.grouped_tile_size(M, K, 16)
+    grid = (M // t) * (K // t)
+    gmm_ops._clamp_warned.clear()
+    with pytest.warns(UserWarning, match="clamped"):
+        y = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=grid + 123,
+                                 interpret=True)
+    assert np.isfinite(np.asarray(y)).all()
+    with warnings.catch_warnings():           # second time: warn-once
+        warnings.simplefilter("error")
+        gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=grid + 123,
+                             interpret=True)
+    eff, clamped = gmm_ops.clamped_tiles_cap(grid + 7, M, K, t,
+                                             warn=False)
+    assert eff == grid and clamped
+    # the plan report always carries the clamp signal
+    p = sparse.plan(op, N, ctx=sparse.PlanContext(mode="dynamic_grouped",
+                                                  interpret=True))
+    assert p.artifacts["capacity"]["clamped"] is False
+    assert "clamped" in p.capacity_stats.report()
+
+
+def test_dispatch_prices_planned_capacity_and_wins_low_density():
+    """The tentpole payoff: with the cost model pricing the planned
+    bucket (not the worst case), dynamic_grouped takes the dispatch
+    race in the paper's low-density dynamic regime."""
+    ctx = sparse.PlanContext(allow_pallas=True, differentiable=False)
+    spec = sparse.OpSpec(kind="dynamic", m=4096, k=4096, n=256,
+                         block_size=16, density=1 / 64,
+                         dtype="bfloat16")
+    rep = sparse.plan(spec, ctx=ctx).explain()
+    assert rep["chosen"] == "dynamic_grouped"
+    est = rep["candidates"]
+    assert est["dynamic_grouped"] < est["dense_xla"]
+    assert est["dynamic_grouped"] < est["dynamic_pallas"]
+    # the planned bucket is what made it cheap: its capacity section is
+    # in the plan artifacts with a sub-worst-case tiles_cap
+    cap = rep["capacity"]
+    assert cap["tiles_cap"] < cap["worst_tiles"]
+
+
+def test_moe_dropped_frac_joins_capacity_telemetry():
+    """MoE routing drops surface through the same aggregate the engine
+    reports (eager calls record; traced calls no-op)."""
+    sparse.record_dropped("moe_dispatch", jnp.asarray(0.125))
+    rep = sparse.capacity_report()
+    assert rep["per_plan"]["moe_dispatch"]["overflow_calls"] == 1
+    assert rep["per_plan"]["moe_dispatch"]["max_dropped_frac"] == 0.125

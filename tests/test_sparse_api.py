@@ -241,6 +241,60 @@ def test_disk_cache_stale_version_invalidated(tmp_path):
     assert blob2["env"]["jax"] != "0.0.0-stale"
 
 
+def test_disk_cache_carries_capacity_fields(tmp_path):
+    """Persisted dynamic_grouped plans carry the planned-capacity
+    section (tile, tiles_cap, headroom, ...) and a fresh process
+    re-plans to the identical bucket."""
+    bsr, x, _ = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 4)
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             cache_dir=str(tmp_path))
+    p1 = sparse.plan(op, N, ctx=ctx)
+    path = os.path.join(str(tmp_path),
+                        f"sparse-plans-v{sparse.SCHEMA_VERSION}.json")
+    blob = json.load(open(path))
+    rec = blob["entries"][p1.key]
+    assert rec["route"] == "dynamic_grouped"
+    cap = rec["capacity"]
+    assert cap["tiles_cap"] == p1.artifacts["grouped_tiles_cap"]
+    assert cap["headroom"] == ctx.resolved_headroom()
+    assert {"tile", "expected_tiles", "worst_tiles", "overflow_p",
+            "policy"} <= set(cap)
+
+    sparse.reset()                        # fresh-process simulation
+    p2 = sparse.plan(op, N, ctx=ctx)
+    assert p2.from_disk
+    assert p2.artifacts["grouped_tiles_cap"] == cap["tiles_cap"]
+    np.testing.assert_allclose(np.asarray(p2(op, x)),
+                               np.asarray(p1(op, x)), rtol=0, atol=0)
+
+
+def test_pre_capacity_cache_version_invalidated(tmp_path):
+    """A cache written before the capacity schema (old version tag in
+    the file name AND env) must be ignored -- never mis-read as a
+    planned-capacity verdict."""
+    bsr, x, _ = _problem()
+    op = dsp.encode_from_bsr(bsr, nnz_max=bsr.nnz_blocks + 4)
+    ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,
+                             cache_dir=str(tmp_path))
+    key = sparse.plan(op, N, ctx=ctx).key
+    sparse.reset()
+    # simulate the pre-PR cache: v1 file name, v1 env tag, a record for
+    # the same key with NO capacity section and a different route
+    old = {"env": {"schema": 1, "backend": "cpu", "jax": "0.4.0"},
+           "entries": {key: {"route": "dynamic_xla",
+                             "source": "analytic", "est_seconds": {}}}}
+    os.remove(os.path.join(
+        str(tmp_path), f"sparse-plans-v{sparse.SCHEMA_VERSION}.json"))
+    with open(os.path.join(str(tmp_path), "sparse-plans-v1.json"),
+              "w") as f:
+        json.dump(old, f)
+    p = sparse.plan(op, N, ctx=ctx)
+    assert not p.from_disk                    # old tag never satisfies
+    assert p.route == "dynamic_grouped"
+    assert "capacity" in p.artifacts
+
+
 def test_disk_cache_corrupt_file_ignored(tmp_path):
     bsr, x, _ = _problem()
     path = os.path.join(str(tmp_path),
@@ -491,4 +545,8 @@ def test_engine_builds_plans_at_startup_and_stays_decision_free():
     now = sparse.cache_stats()
     assert now["decisions"] == base["decisions"]
     assert now["plans_built"] == base["plans_built"]
-    assert "startup" in eng.plan_report()
+    rep = eng.plan_report()
+    assert "startup" in rep
+    # aggregated capacity/overflow telemetry rides along (per-plan
+    # planned-bucket stats + MoE drops; totals always present)
+    assert "totals" in rep["capacity"]
