@@ -302,6 +302,93 @@ def grouped_capacity(tiny: bool = False):
     return recs
 
 
+# -- tp_crossover: measured tensor-parallel crossover (gspmd vs shard_map vs unsharded) ---
+
+def tp_crossover(tiny: bool = False):
+    """Where does the k-sharded TP route start beating the unsharded
+    one -- and which TP lowering (gspmd vs explicit shard_map + psum)
+    wins?  Each record carries two answers:
+
+    * ``est_tp_speedup`` -- the deterministic cost-model ratio at
+      q=8 (best unsharded / best TP).  This is the number
+      ``tools/bench_check.py`` gates on: it moves only when the model
+      or the planner changes, never with runner noise.
+    * measured wall-clock of the gspmd / shard_map / unsharded
+      candidates when >= 2 devices are available (the multi-device CI
+      step runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``),
+      via the same ``sparse.plan`` measured race serving uses --
+      informational: host-platform collectives bound the trend, not
+      the TPU crossover.
+
+    ``tiny=True`` is the CI smoke grid that seeds BENCH_tp.json.
+    """
+    import importlib
+
+    from repro import sparse
+    # NOT `from repro.sparse import plan`: the package __init__ rebinds
+    # the `plan` attribute to the function, hiding the submodule
+    plan_mod = importlib.import_module("repro.sparse.plan")
+
+    q_model = 8
+    q_meas = min(q_model, len(jax.devices()))
+    mesh = (jax.make_mesh((q_meas,), ("model",)) if q_meas >= 2
+            else None)
+    recs = []
+    b = 16
+    ms = (512, 1024) if tiny else (512, 1024, 2048, 4096)
+    ds = (1 / 4, 1 / 16) if tiny else (1 / 4, 1 / 16, 1 / 64)
+    ns = (64,) if tiny else (64, 1024)
+    key = jax.random.PRNGKey(0)
+    for m in ms:
+        for d in ds:
+            for n in ns:
+                spec = sparse.OpSpec(kind="static", m=m, k=m, n=n,
+                                     block_size=b, density=d,
+                                     dtype="float32")
+                est_tp = {r: plan_mod._tp_estimate(spec, q_model, r)
+                          for r in sparse.TP_ROUTES}
+                est_un = {r: dispatch._estimate(r, m, m, n, b, d,
+                                                "float32")
+                          for r in ("static_xla", "dense_xla")}
+                best_tp = min(est_tp, key=est_tp.get)
+                best_un = min(est_un, key=est_un.get)
+                rec = dict(
+                    fig="tp_crossover", m=m, b=b, density=d, n=n,
+                    q_model=q_model, est_best_tp=best_tp,
+                    est_tp_us=round(est_tp[best_tp] * 1e6, 3),
+                    est_unsharded_us=round(est_un[best_un] * 1e6, 3),
+                    est_tp_speedup=round(est_un[best_un] /
+                                         est_tp[best_tp], 4))
+                if mesh is not None:
+                    bsr = BlockSparseMatrix.random(key, m, m, b, d)
+                    x = jax.random.normal(jax.random.PRNGKey(1),
+                                           (m, n))
+                    ctx = sparse.PlanContext(mesh=mesh, measure=True,
+                                             cache=False)
+                    p = sparse.plan(bsr, n, x=x, ctx=ctx)
+                    tp = p.artifacts["tp"]
+                    # only routes that were actually wall-clocked: the
+                    # race leaves analytic estimates in est_seconds for
+                    # candidates this host cannot run (Pallas off-TPU)
+                    dctx = ctx.dispatch_ctx()
+                    meas = {r: round(s * 1e6, 1)
+                            for r, s in p.est_seconds.items()
+                            if r in sparse.TP_ROUTES
+                            or dispatch._executable(r, dctx)}
+                    rec.update(
+                        q_measured=q_meas, chosen=p.route,
+                        source=p.source, measured_us=meas,
+                        tp_speedup_measured=tp["tp_speedup_vs_unsharded"],
+                        tp_wins_measured=tp["tp_wins"])
+                else:
+                    rec.update(q_measured=None, chosen=None,
+                               source="analytic", measured_us=None,
+                               tp_speedup_measured=None,
+                               tp_wins_measured=None)
+                recs.append(rec)
+    return recs
+
+
 # -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
 
 def occupancy_study():
@@ -329,7 +416,8 @@ ALL = {
     "occupancy": occupancy_study,
     "dispatch": dispatch_decisions,
     "grouped_capacity": grouped_capacity,
+    "tp_crossover": tp_crossover,
 }
 
 # experiments with a reduced CI smoke grid (benchmarks.run --tiny)
-TINY_CAPABLE = ("dispatch", "grouped_capacity")
+TINY_CAPABLE = ("dispatch", "grouped_capacity", "tp_crossover")

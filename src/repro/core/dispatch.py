@@ -429,16 +429,25 @@ def _executable(route: str, ctx: DispatchContext) -> bool:
     return ctx.interpret or jax.default_backend() == "tpu"
 
 
+def measure_callable(fn, *args, reps: int = 3) -> float:
+    """Wall-clock ``jit(fn)(*args)`` (compile + warm excluded): the one
+    timing harness every measured-autotune race uses -- the unsharded
+    dispatch race below and the plan-level TP race in
+    ``repro.sparse.plan`` -- so verdicts are comparable across layers."""
+    run = jax.jit(fn)
+    run(*args).block_until_ready()                # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        y = run(*args)
+    y.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
 def _measure_route(route, operand, x, ctx, *, reps: int = 3) -> float:
     # operand is closed over, not passed: static patterns must stay host
     # constants (a jit argument would trace the index arrays).
-    run = jax.jit(lambda xx: _run_route(route, operand, xx, ctx))
-    run(x).block_until_ready()                    # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        y = run(x)
-    y.block_until_ready()
-    return (time.perf_counter() - t0) / reps
+    return measure_callable(lambda xx: _run_route(route, operand, xx, ctx),
+                            x, reps=reps)
 
 
 def decide(operand: Operand, n: int, *,

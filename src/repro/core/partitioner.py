@@ -245,6 +245,7 @@ class KShardPlan:
     shape: Tuple[int, int]
     block_size: int
     real_counts: np.ndarray  # [q] nnz blocks actually owned per shard
+    balanced: bool = True    # nnz-balanced uneven splits vs fixed even
 
     @property
     def q(self) -> int:
@@ -262,6 +263,10 @@ def plan_k_shards(bsr: BlockSparseMatrix, q: int,
         raise ValueError("plan_k_shards requires static pattern")
     mask = bsr.block_mask()
     mb, kb = mask.shape
+    if q < 1 or q > kb:
+        raise ValueError(f"q={q} k-shards outside [1, {kb} block "
+                         f"columns] for shape {bsr.shape} at block "
+                         f"{bsr.block_size}")
     bounds = (balanced_k_splits(mask, q) if balanced else even_k_splits(kb, q))
     rows = np.asarray(bsr.row_idx)
     cols = np.asarray(bsr.col_idx)
@@ -284,7 +289,7 @@ def plan_k_shards(bsr: BlockSparseMatrix, q: int,
     row_out[dst_q, dst_slot] = rows[src_order]
     col_out[dst_q, dst_slot] = cols[src_order]
     return KShardPlan(bounds, row_out, col_out, dst_q, dst_slot, src_order,
-                      bsr.shape, bsr.block_size, counts)
+                      bsr.shape, bsr.block_size, counts, balanced)
 
 
 def apply_k_shards(plan: KShardPlan, values) -> ShardedBlocks:

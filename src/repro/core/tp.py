@@ -13,10 +13,16 @@ outputs.  At pod scale the same scheme maps onto the ``model`` mesh axis:
 Two entry points:
 
 * ``tp_spmm_shard_map`` -- explicit shard_map + psum (paper-faithful,
-  collective schedule fully pinned down; used in perf comparisons).
+  collective schedule fully pinned down; the ``static_tp_shardmap``
+  plan route).
 * ``tp_spmm_gspmd``     -- same math under plain jit with sharding
   constraints (GSPMD inserts the psum); composes freely inside larger
-  pjit programs, used by model layers.
+  pjit programs, used by model layers (the ``static_tp`` plan route).
+
+Which one wins is a *measured* question (the all-reduce schedule and
+the local-work overlap differ), so ``repro.sparse.plan`` races both --
+plus the unsharded candidates -- under measured autotune when a mesh is
+given (see docs/api.md, "Tensor-parallel plans").
 """
 from __future__ import annotations
 
@@ -25,6 +31,33 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partitioner import ShardedBlocks
+
+
+def _shard_map():
+    """jax moved shard_map out of experimental around 0.5/0.6; support
+    both homes (the repo floor is jax>=0.4.30)."""
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:              # jax >= 0.6: top-level only
+        from jax import shard_map
+    return shard_map
+
+
+def shard_map_executable(mesh, axis: str, q: int) -> bool:
+    """Can ``tp_spmm_shard_map`` actually run on this mesh?  Needs a
+    concrete (device-backed) mesh whose ``axis`` size equals the shard
+    count ``q`` -- an ``AbstractMesh`` or a tp_q forced past the real
+    device count can only execute the gspmd lowering."""
+    if mesh is None or axis not in getattr(mesh, "axis_names", ()):
+        return False
+    try:
+        # AbstractMesh either lacks .devices or raises ValueError from
+        # the property (jax-version dependent) -- both mean "no devices"
+        if mesh.devices is None:
+            return False
+    except (AttributeError, ValueError):
+        return False
+    return int(mesh.shape[axis]) == int(q)
 
 
 def _local_spmm(values, row_idx, col_idx, x, *, mb: int, b: int):
@@ -40,7 +73,14 @@ def _local_spmm(values, row_idx, col_idx, x, *, mb: int, b: int):
 
 def tp_spmm_shard_map(sb: ShardedBlocks, x: jax.Array, *, mesh,
                       axis: str = "model") -> jax.Array:
-    """Explicit paper-style TP SpMM.  ``sb.q`` must equal the axis size."""
+    """Explicit paper-style TP SpMM.  ``sb.q`` must equal the axis size
+    (validated -- a mismatched shard plan would silently mis-shard)."""
+    if not shard_map_executable(mesh, axis, sb.q):
+        raise ValueError(
+            f"tp_spmm_shard_map needs a concrete mesh with axis "
+            f"{axis!r} of size q={sb.q}; got mesh axes "
+            f"{tuple(getattr(mesh, 'axis_names', ()))} "
+            f"{dict(getattr(mesh, 'shape', {}))}")
     mb = sb.shape[0] // sb.block_size
     b = sb.block_size
 
@@ -50,10 +90,9 @@ def tp_spmm_shard_map(sb: ShardedBlocks, x: jax.Array, *, mesh,
                         mb=mb, b=b)
         return jax.lax.psum(y, axis)
 
-    from jax.experimental.shard_map import shard_map
-    fn = shard_map(shard_fn, mesh=mesh,
-                   in_specs=(P(axis), P(axis), P(axis), P()),
-                   out_specs=P(), check_rep=False)
+    fn = _shard_map()(shard_fn, mesh=mesh,
+                      in_specs=(P(axis), P(axis), P(axis), P()),
+                      out_specs=P(), check_rep=False)
     return fn(sb.values, sb.row_idx, sb.col_idx, x)
 
 

@@ -44,7 +44,8 @@ class Engine:
                  retained: bool = False, sample: str = "greedy",
                  dispatch_ctx: Optional[dispatch.DispatchContext] = None,
                  plan_cache_dir: Optional[str] = None,
-                 warm_plans: bool = True, telemetry: bool = True):
+                 warm_plans: bool = True, telemetry: bool = True,
+                 mesh=None, tp_axis: str = "model"):
         self.lm = lm
         self.params = params
         self.batch = batch
@@ -63,9 +64,12 @@ class Engine:
         # callback per planned-capacity matmul per decode step) for
         # latency-critical deployments; plan_report() then shows only
         # plan-time capacity verdicts, no running overflow counts
+        # mesh=... makes the engine's plans TP-aware: the k-sharded
+        # routes (gspmd + shard_map) join every static plan's measured
+        # race, and verdicts are keyed on this mesh's axis names+sizes
         self.plan_ctx = dataclasses.replace(
             sparse_api.PlanContext.from_dispatch(self.dispatch_ctx),
-            telemetry=telemetry)
+            telemetry=telemetry, mesh=mesh, tp_axis=tp_axis)
         if plan_cache_dir is not None:
             self.plan_ctx = dataclasses.replace(
                 self.plan_ctx, cache_dir=plan_cache_dir, persist=True)
@@ -112,11 +116,13 @@ class Engine:
     def plan_report(self) -> dict:
         """Plans built at engine startup (decode program) + live cache
         counters + aggregated capacity/overflow telemetry (per-plan
-        planned-bucket stats and MoE routing drops) -- the serving view
-        of the plan-first lifecycle."""
+        planned-bucket stats and MoE routing drops) + every
+        tensor-parallel decision (raced candidates, measured crossover)
+        -- the serving view of the plan-first lifecycle."""
         return {"startup": dict(self.plan_stats),
                 "now": sparse_api.cache_stats(),
-                "capacity": sparse_api.capacity_report()}
+                "capacity": sparse_api.capacity_report(),
+                "tp": sparse_api.tp_report()}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: Request) -> bool:

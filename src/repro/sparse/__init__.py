@@ -38,6 +38,7 @@ from repro.sparse.plan import (  # noqa: F401
     reset,
     spmm,
     spmm_nt,
+    tp_report,
     use_ctx,
 )
 from repro.sparse.spec import (  # noqa: F401
@@ -48,4 +49,5 @@ from repro.sparse.spec import (  # noqa: F401
     PlanContext,
     PLAN_MODES,
     PLAN_ROUTES,
+    TP_ROUTES,
 )

@@ -35,7 +35,11 @@ import jax
 # bucket: tile/tiles_cap/headroom/...) and plan fingerprints grew the
 # capacity knobs -- v1 files are ignored (different file name) so a
 # pre-capacity cache can never be mis-read as a planned-capacity verdict
-SCHEMA_VERSION = 2
+# v3: TP fingerprints grew the mesh identity (axis names + sizes +
+# tp_balanced) and the route vocabulary grew "static_tp_shardmap" -- a
+# v2 TP verdict was keyed on (q, axis) only, so it could answer for a
+# different mesh topology; v2 files are invalidated wholesale
+SCHEMA_VERSION = 3
 
 _lock = threading.RLock()
 _configured_dir: Optional[str] = None

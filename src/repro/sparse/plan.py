@@ -40,7 +40,8 @@ from repro.core.bsr import BlockSparseMatrix
 from repro.core.dynamic_sparse import DynamicOperand, _dspmm
 from repro.sparse import cache as cache_lib
 from repro.sparse.spec import (CapacityStats, OpSpec, PlanContext,
-                               PLAN_ROUTES, pattern_key, payload_of)
+                               PLAN_ROUTES, TP_ROUTES, pattern_key,
+                               payload_of)
 
 Operand = Union[jax.Array, np.ndarray, BlockSparseMatrix, DynamicOperand]
 
@@ -61,6 +62,7 @@ def reset(*, counters: bool = True):
     fresh process."""
     with _plan_lock:
         _plan_cache.clear()
+        _shard_meta_cache.clear()
     with _capacity_lock:
         _capacity_registry.clear()
     cache_lib.reset(counters=counters)
@@ -116,6 +118,30 @@ def cache_stats() -> dict:
     stats = cache_lib.cache_stats()
     stats["plan_entries"] = len(_plan_cache)
     return stats
+
+
+def tp_report() -> dict:
+    """Every tensor-parallel decision this process has planned: per plan
+    the raced candidates, the verdict's source (measured / analytic /
+    disk), and the measured crossover (best-unsharded / best-TP time --
+    > 1 means the problem is past the TP crossover).  The serving
+    engine folds this into ``plan_report()``."""
+    with _plan_lock:
+        plans = list(_plan_cache.values())
+    per = {}
+    for p in plans:
+        tp = p.artifacts.get("tp")
+        if tp:
+            per[p.key] = dict(tp, route=p.route, from_disk=p.from_disk)
+    return {
+        "per_plan": per,
+        "totals": {
+            "tp_planned": len(per),
+            "tp_chosen": sum(1 for r in per.values() if r["chosen"]),
+            "measured": sum(1 for r in per.values()
+                            if r["source"] == "measured"),
+        },
+    }
 
 
 def configure(cache_dir: Optional[str] = None):
@@ -215,6 +241,7 @@ class MatmulPlan:
             "cached": self.from_disk,
             "from_disk": self.from_disk,
             "cache_key": self.key,
+            "tp": self.artifacts.get("tp"),
             "plan": dict(self.artifacts, executable=self.executable),
             "capacity": (dict(self.artifacts.get("capacity", {}),
                               stats=self.capacity_stats.report())
@@ -244,8 +271,17 @@ def format_plan(plan: MatmulPlan) -> str:
         extra.append(f"buckets: {art['bucket_blocks']} blocks/bucket over "
                      f"q=({art['q_m']},{art['q_k']},{art['q_n']})")
     if "tp_q" in art:
-        extra.append(f"tp: q={art['tp_q']} nnz-balanced k-shards over "
-                     f"'{art['tp_axis']}'")
+        extra.append(
+            f"tp: {art.get('tp_route', 'static_tp')} q={art['tp_q']} "
+            f"{'nnz-balanced' if art.get('tp_balanced', True) else 'even'}"
+            f" k-shards over '{art['tp_axis']}'")
+    tpd = art.get("tp")
+    if tpd and tpd.get("tp_speedup_vs_unsharded") is not None:
+        extra.append(
+            f"tp race ({tpd['source']}): best {tpd['best_tp_route']} "
+            f"{tpd['tp_speedup_vs_unsharded']}x vs "
+            f"{tpd['best_unsharded_route']}"
+            + (" [past crossover]" if tpd["tp_wins"] else ""))
     if "grouped_tile" in art:
         t = art["grouped_tile"]
         cap = art.get("grouped_tiles_cap")   # exact for static kind
@@ -281,7 +317,11 @@ def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
                                spec.block_size, spec.density, spec.dtype,
                                dctx)
     q = ctx.resolved_tp_q()
-    tp = ("tp", q, ctx.tp_axis) if q else ()
+    # a TP verdict is a property of the mesh it was raced on: axis names
+    # + sizes are part of the key (a verdict measured on a 1x8 mesh must
+    # not answer for 2x4, nor for a tp_q-only plan without a mesh)
+    tp = (("tp", q, ctx.tp_axis, ctx.tp_balanced)
+          + ctx.mesh_fingerprint()) if q else ()
     # capacity *sizing* is part of the plan identity for dynamic
     # problems: a plan built at headroom 1.25 must not answer for
     # headroom 2.0.  The runtime-only knobs (overflow_threshold,
@@ -294,23 +334,108 @@ def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
     return ("plan", spec.op, spec.mode) + base + tp + cap
 
 
-def _tp_estimate(spec: OpSpec, q: int) -> float:
-    """Paper Fig 1a at mesh scale: nnz-balanced local SpMM (1/q of the
-    static work) + the single output reduction over the TP axis."""
+def _tp_estimate(spec: OpSpec, q: int,
+                 route: str = "static_tp") -> float:
+    """Analytic prior for the TP routes (paper Fig 1a at mesh scale):
+    nnz-balanced local SpMM (1/q of the static work) + the single output
+    reduction over the TP axis.  This is only the *seed* of the race --
+    with a mesh and ``measure=True`` both lowerings are wall-clocked on
+    the real devices and the measured verdict wins (see ``_decide``)."""
     t_local = dispatch._estimate("static_xla", spec.m, spec.k, spec.n,
                                  spec.block_size, spec.density,
                                  spec.dtype) / max(1, q)
     bytes_el = max(1, jnp.dtype(spec.dtype).itemsize)
     t_reduce = (spec.m * spec.n * bytes_el) * max(0, q - 1) / max(1, q) \
         / planner_lib.ICI_BW
-    return t_local + t_reduce
+    # the gspmd lowering leaves the collective schedule to the compiler;
+    # the explicit shard_map path pins it down -- mirror the small
+    # xla-vs-pallas prior of dispatch._estimate so ties break toward the
+    # pinned schedule when both are admissible and nothing was measured
+    penalty = 1.05 if route == "static_tp" else 1.0
+    return (t_local + t_reduce) * penalty
+
+
+def _tp_candidates(spec: OpSpec, ctx: PlanContext,
+                   q: Optional[int]) -> Tuple[str, ...]:
+    """Admissible TP routes for this plan.  gspmd executes anywhere
+    (the psum lowers to a local sum without a mesh); shard_map needs a
+    concrete mesh whose tp_axis size equals q."""
+    if spec.kind != "static" or not q or q < 2:
+        return ()
+    routes = ["static_tp"]
+    if ctx.shardmap_executable():
+        routes.append("static_tp_shardmap")
+    return tuple(routes)
+
+
+# one TP race + executor build calls _tp_closure up to three times for
+# the same pattern; the host-side shard planning (argsort + scatter over
+# all nnz blocks) is memoized per (pattern, q, balanced) so it runs once
+_shard_meta_cache: Dict[tuple, partitioner.KShardPlan] = {}
+
+
+def _shard_meta_for(operand, q: int,
+                    balanced: bool) -> partitioner.KShardPlan:
+    pk = pattern_key(operand)
+    if pk is None:                       # no stable pattern identity
+        return partitioner.plan_k_shards(operand, q, balanced=balanced)
+    key = (pk, operand.shape, operand.block_size, q, balanced)
+    with _plan_lock:
+        meta = _shard_meta_cache.get(key)
+    if meta is None:
+        meta = partitioner.plan_k_shards(operand, q, balanced=balanced)
+        with _plan_lock:
+            meta = _shard_meta_cache.setdefault(key, meta)
+    return meta
+
+
+def _tp_closure(route: str, spec: OpSpec, ctx: PlanContext,
+                operand: "BlockSparseMatrix"):
+    """(execute_closure, artifacts) for one TP route -- shared by the
+    executor builder and the measured race, so autotune wall-clocks
+    exactly what the plan will run."""
+    q = ctx.resolved_tp_q()
+    shard_meta = _shard_meta_for(operand, q, ctx.tp_balanced)
+    bal = partitioner.balance_report(shard_meta.real_counts)
+    art = dict(tp_q=q, tp_axis=ctx.tp_axis, tp_route=route,
+               tp_balanced=ctx.tp_balanced,
+               tp_imbalance=bal["imbalance"], tp_slots=shard_meta.slots)
+    axis = ctx.tp_axis
+    if route == "static_tp_shardmap":
+        mesh = ctx.mesh
+        return (lambda v, x: tp_lib.tp_spmm_shard_map(
+            partitioner.apply_k_shards(shard_meta, v), x, mesh=mesh,
+            axis=axis)), art
+    return (lambda v, x: tp_lib.tp_spmm_gspmd(
+        partitioner.apply_k_shards(shard_meta, v), x, axis=axis)), art
+
+
+def _measure_tp_route(route: str, spec: OpSpec, ctx: PlanContext,
+                      operand, x) -> float:
+    """Wall-clock one TP lowering on the real (or host-platform)
+    devices.  The gspmd trace gets the mesh installed as the activation
+    mesh so its sharding constraints are live -- the measurement covers
+    the collective, not just the local math."""
+    from repro.sharding import rules
+    fn, _ = _tp_closure(route, spec, ctx, operand)
+    if ctx.mesh is not None and route == "static_tp":
+        with rules.activation_mesh(ctx.mesh):
+            return dispatch.measure_callable(
+                fn, jnp.asarray(operand.values), x)
+    return dispatch.measure_callable(fn, jnp.asarray(operand.values), x)
 
 
 def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
-            x) -> Tuple[str, Dict[str, float], str, bool, Optional[dict]]:
-    """-> (route, est_seconds, source, from_disk, disk_capacity).
-    The verdict is persisted by ``plan()`` (one store, after the
-    executor -- and its capacity section -- are built)."""
+            x) -> Tuple[str, Dict[str, float], str, bool, Optional[dict],
+                        Optional[str]]:
+    """-> (route, est_seconds, source, from_disk, disk_capacity,
+    tp_source).  ``tp_source`` labels the TP candidates' entries in
+    ``est_seconds`` separately from the overall verdict: the unsharded
+    side can be measured while the TP side stayed analytic (abstract
+    inputs + a decision-cache replay), and the report must never call
+    that ratio 'measured'.  The verdict is persisted by ``plan()`` (one
+    store, after the executor -- and its capacity section -- are
+    built)."""
     dctx = ctx.dispatch_ctx()
     key = cache_lib.key_string(_fingerprint(spec, ctx))
     use_disk = ctx.cache and ctx.persistence_on()
@@ -319,22 +444,45 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
         if rec is not None and rec.get("route") in PLAN_ROUTES:
             return (rec["route"], dict(rec.get("est_seconds", {})),
                     rec.get("source", "analytic"), True,
-                    rec.get("capacity"))
+                    rec.get("capacity"),
+                    rec.get("tp_source", rec.get("source")))
 
     cache_lib.bump("decisions")
     q = ctx.resolved_tp_q()
-    forced_tp = spec.mode == "static_tp"
+    forced_tp = spec.mode in TP_ROUTES
+    tp_measurable = (operand is not None and x is not None
+                     and dispatch._is_concrete(
+                         x, *jax.tree_util.tree_leaves(operand)))
     if forced_tp:
         if spec.kind != "static":
-            raise ValueError(f"mode 'static_tp' cannot execute a "
+            raise ValueError(f"mode {spec.mode!r} cannot execute a "
                              f"{spec.kind} operand")
         if not q:
-            raise ValueError("mode 'static_tp' needs ctx.mesh (with "
+            raise ValueError(f"mode {spec.mode!r} needs ctx.mesh (with "
                              "ctx.tp_axis) or an explicit ctx.tp_q")
-        route = "static_tp"
-        est = {"static_tp": _tp_estimate(spec, q)}
+        if spec.mode == "static_tp_shardmap":
+            if not ctx.shardmap_executable():
+                raise ValueError(
+                    "mode 'static_tp_shardmap' needs a concrete "
+                    f"ctx.mesh with axis {ctx.tp_axis!r} of size q={q} "
+                    "(an AbstractMesh or bare tp_q can only execute "
+                    "the 'static_tp' gspmd lowering)")
+            cands = ("static_tp_shardmap",)
+        else:
+            # "static_tp" as a mode = the TP family: race both lowerings
+            cands = _tp_candidates(spec, ctx, q) or ("static_tp",)
+        est = {r: _tp_estimate(spec, q, r) for r in cands}
         source = "forced"
-    elif operand is not None:
+        if ctx.measure and len(cands) > 1 and tp_measurable:
+            measured = {r: _measure_tp_route(r, spec, ctx, operand, x)
+                        for r in cands}
+            est.update(measured)
+            cache_lib.bump("measurements")
+            source = "measured"
+        route = min(est, key=est.get)
+        return route, est, source, False, None, source
+
+    if operand is not None:
         dkey = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
                                    spec.block_size, spec.density,
                                    spec.dtype, dctx)
@@ -352,15 +500,88 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
         route = min(est, key=est.get)
         source = "forced" if len(cands) == 1 else "analytic"
 
-    # mesh-aware TP candidate (auto mode, static pattern, mesh present)
-    if (not forced_tp and spec.kind == "static" and spec.mode == "auto"
-            and ctx.mesh is not None and q and q > 1
-            and source != "measured"):
-        est["static_tp"] = _tp_estimate(spec, q)
-        if est["static_tp"] < est[route]:
-            route = "static_tp"
+    # mesh-aware TP candidates (auto mode, static pattern, mesh/tp_q
+    # present): the measured-autotune race -- gspmd vs shard_map vs the
+    # unsharded candidates -- or the analytic prior when not measuring
+    tp_routes = (_tp_candidates(spec, ctx, q)
+                 if spec.mode == "auto" and ctx.mesh is not None else ())
+    tp_source = None
+    if tp_routes:
+        for r in tp_routes:
+            est[r] = _tp_estimate(spec, q, r)
+        tp_source = "analytic"
+        if ctx.measure and tp_measurable:
+            if source != "measured":
+                # the unsharded side came back analytic (a decision-
+                # cache replay from a traced first call): re-race it
+                # cache-bypassed so both sides of the min() are wall
+                # clocks -- analytic model seconds and host timings are
+                # not comparable units
+                dec2 = dispatch.decide(
+                    operand, spec.n,
+                    ctx=dataclasses.replace(dctx, cache=False), x=x)
+                if dec2.source == "measured":
+                    est.update(dec2.est_seconds)
+                    route, source = dec2.route, dec2.source
+                    cache_lib.bump("measurements")
+            if source == "measured":
+                measured_tp = {r: _measure_tp_route(r, spec, ctx,
+                                                    operand, x)
+                               for r in tp_routes}
+                est.update(measured_tp)
+                tp_source = "measured"
+                cache_lib.bump("measurements")
+                # compare measured against measured: the unsharded
+                # race wall-clocked every runnable candidate
+                runnable = {r: est[r] for r in est
+                            if r in measured_tp
+                            or dispatch._executable(r, dctx)}
+                route = min(runnable, key=runnable.get)
+        if (source != "measured"
+                and est[min(tp_routes, key=est.get)] < est[route]):
+            # analytic-vs-analytic only: never let a modeled TP number
+            # overturn (or lose to) numbers of a different unit
+            route = min(tp_routes, key=est.get)
 
-    return route, est, source, False, None
+    return route, est, source, False, None, tp_source
+
+
+def _tp_decision(ctx: PlanContext, route: str, est: Dict[str, float],
+                 source: str,
+                 tp_source: Optional[str]) -> Optional[dict]:
+    """The TP section of the plan report: what the race saw and where
+    the crossover sits.  ``tp_speedup_vs_unsharded`` is best-unsharded
+    time / best-TP time -- > 1 means TP is past the crossover for this
+    problem on this mesh -- reported only when both sides carry the
+    same units (both measured or both analytic); a mixed verdict (the
+    unsharded side measured, the TP side stuck on its analytic prior
+    because inputs were abstract) reports None rather than a
+    model-seconds-vs-wall-clock ratio."""
+    tp_est = {r: est[r] for r in TP_ROUTES if r in est}
+    if not tp_est:
+        return None
+    q = ctx.resolved_tp_q()
+    best_tp = min(tp_est, key=tp_est.get)
+    unsh = {r: s for r, s in est.items() if r not in TP_ROUTES}
+    best_un = min(unsh, key=unsh.get) if unsh else None
+    tp_source = tp_source or source
+    comparable = best_un is None or tp_source == source
+    speedup = (est[best_un] / est[best_tp]
+               if best_un is not None and comparable else None)
+    mesh_fp = ctx.mesh_fingerprint()
+    return {
+        "q": q, "axis": ctx.tp_axis, "balanced": ctx.tp_balanced,
+        "mesh": ({n: s for n, s in zip(*mesh_fp)} if mesh_fp else None),
+        "candidates": {r: tp_est[r] for r in
+                       sorted(tp_est, key=tp_est.get)},
+        "chosen": route if route in TP_ROUTES else None,
+        "best_tp_route": best_tp,
+        "best_unsharded_route": best_un,
+        "source": tp_source,
+        "tp_speedup_vs_unsharded": (round(speedup, 4)
+                                    if speedup is not None else None),
+        "tp_wins": bool(speedup is not None and speedup > 1.0),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -437,15 +658,10 @@ def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
         return (lambda v, x: dsmm_ops.dsmm(as_dyn(v), x,
                                            interpret=interpret)), art
 
-    if route == "static_tp":
-        q = ctx.resolved_tp_q()
-        shard_meta = partitioner.plan_k_shards(operand, q)
-        bal = partitioner.balance_report(shard_meta.real_counts)
-        art.update(tp_q=q, tp_axis=ctx.tp_axis,
-                   tp_imbalance=bal["imbalance"], tp_slots=shard_meta.slots)
-        axis = ctx.tp_axis
-        return (lambda v, x: tp_lib.tp_spmm_gspmd(
-            partitioner.apply_k_shards(shard_meta, v), x, axis=axis)), art
+    if route in TP_ROUTES:
+        fn, tp_art = _tp_closure(route, spec, ctx, operand)
+        art.update(tp_art)
+        return fn, art
 
     raise ValueError(f"unknown static route {route!r}")
 
@@ -652,11 +868,14 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
             cache_lib.bump("plan_hits")
             return hit
 
-    route, est, source, from_disk, disk_cap = _decide(spec, ctx,
-                                                      operand, x)
+    route, est, source, from_disk, disk_cap, tp_source = _decide(
+        spec, ctx, operand, x)
     key_str = cache_lib.key_string(fp)
     execute, artifacts = _build_executor(spec, route, ctx, operand,
                                          key_str, disk_cap)
+    tp_info = _tp_decision(ctx, route, est, source, tp_source)
+    if tp_info is not None:
+        artifacts["tp"] = tp_info
     stats = artifacts.pop("_capacity_stats", None)
     p = MatmulPlan(spec=spec, route=route, source=source,
                    est_seconds=est, from_disk=from_disk, ctx=ctx,
@@ -672,6 +891,11 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
     if ctx.cache and ctx.persistence_on():
         rec = {"route": route, "source": source,
                "est_seconds": {r: float(s) for r, s in est.items()}}
+        if tp_source is not None:
+            # TP entries can carry a different unit than the verdict
+            # (analytic prior next to measured unsharded times); label
+            # them so a disk replay reports the crossover honestly
+            rec["tp_source"] = tp_source
         if "capacity" in artifacts:
             rec["capacity"] = {k2: v for k2, v in
                                artifacts["capacity"].items()

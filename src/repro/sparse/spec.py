@@ -31,11 +31,14 @@ from repro.core.dynamic_sparse import DynamicOperand
 KINDS = ("dense", "static", "dynamic")
 OPS = ("spmm", "matmul", "batched_matmul")
 
-# sparse-level plannable routes = dispatch routes + the mesh-aware route
-# lifted from core/tp.py (dispatch cannot model it: it needs the pattern
-# artifacts and a mesh axis)
-PLAN_ROUTES = dispatch.ROUTES + ("static_tp",)
-PLAN_MODES = dispatch.MODES + ("static_tp",)
+# sparse-level plannable routes = dispatch routes + the mesh-aware
+# routes lifted from core/tp.py (dispatch cannot model them: they need
+# the pattern artifacts and a mesh axis).  "static_tp" is the gspmd
+# lowering; "static_tp_shardmap" the explicit shard_map + psum path --
+# as a *mode*, "static_tp" races both TP lowerings (family semantics).
+TP_ROUTES = ("static_tp", "static_tp_shardmap")
+PLAN_ROUTES = dispatch.ROUTES + TP_ROUTES
+PLAN_MODES = dispatch.MODES + TP_ROUTES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,12 +212,20 @@ class PlanContext:
                 or $REPRO_CACHE_DIR).
     cache_dir   directory for the persistent decision cache.
     mesh        a ``jax.sharding.Mesh``; when set (and the pattern is
-                available) the nnz-balanced TP route from ``core/tp.py``
-                joins the candidate set.
-    tp_axis     mesh axis name the TP route shards/reduces over.
-    tp_q        explicit shard count for the TP route (defaults to the
+                available) the nnz-balanced TP routes from ``core/tp.py``
+                join the candidate set: ``static_tp`` (gspmd) always,
+                ``static_tp_shardmap`` when the mesh is concrete with
+                ``tp_axis`` sized to the shard count.  The mesh axis
+                names + sizes are part of the plan fingerprint, so a
+                verdict measured on one mesh never answers for another.
+    tp_axis     mesh axis name the TP routes shard/reduce over.  A mesh
+                whose axes do not include it is a configuration error
+                and raises (never a silent unsharded fallback).
+    tp_q        explicit shard count for the TP routes (defaults to the
                 mesh axis size; lets tests force ``static_tp`` without a
                 real multi-device mesh).
+    tp_balanced nnz-balanced uneven k-splits (paper Fig. 1a, default)
+                vs fixed even splits for the TP shard plan.
     units       parallel-unit budget for ``planner.plan_dynamic`` bucket
                 sizing.
 
@@ -248,6 +259,7 @@ class PlanContext:
     mesh: Any = None
     tp_axis: str = "model"
     tp_q: Optional[int] = None
+    tp_balanced: bool = True
     units: int = 16
     headroom: Optional[float] = None
     capacity_policy: str = "planned"
@@ -304,10 +316,36 @@ class PlanContext:
     def resolved_tp_q(self) -> Optional[int]:
         if self.tp_q is not None:
             return int(self.tp_q)
-        if self.mesh is not None and self.tp_axis in getattr(
-                self.mesh, "axis_names", ()):
+        if self.mesh is not None:
+            names = tuple(getattr(self.mesh, "axis_names", ()))
+            if self.tp_axis not in names:
+                # a mesh without the TP axis is a configuration error:
+                # silently planning unsharded would hide the mistake
+                # until a production profile showed no all-reduces
+                raise ValueError(
+                    f"PlanContext.mesh axes {names} do not include "
+                    f"tp_axis {self.tp_axis!r}; pass "
+                    f"PlanContext(tp_axis=...) naming the mesh axis to "
+                    f"shard k over, or set tp_q explicitly to plan "
+                    f"without a mesh")
             return int(self.mesh.shape[self.tp_axis])
         return None
+
+    def mesh_fingerprint(self) -> tuple:
+        """Mesh identity for the plan/disk fingerprint: axis names +
+        sizes (device ids deliberately excluded -- a verdict holds for
+        any same-shape mesh on this backend)."""
+        if self.mesh is None:
+            return ()
+        names = tuple(str(n) for n in self.mesh.axis_names)
+        return (names, tuple(int(self.mesh.shape[n]) for n in names))
+
+    def shardmap_executable(self) -> bool:
+        """Is the explicit shard_map TP lowering runnable here?"""
+        from repro.core import tp as tp_lib
+        q = self.resolved_tp_q()
+        return bool(q) and tp_lib.shard_map_executable(
+            self.mesh, self.tp_axis, q)
 
 
 def pattern_key(operand) -> Optional[tuple]:

@@ -1,0 +1,123 @@
+"""tools/bench_check.py: the CI benchmark regression gate.  Checked
+ratios are deterministic cost-model outputs, so the gate's contract is
+sharp: within tolerance passes, a >tolerance drop / a route flip / a
+shrunk grid fails, ``--update`` (re)writes the baseline."""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(REPO, "tools", "bench_check.py")
+
+BLOB = {
+    "tp_crossover": [
+        {"fig": "tp_crossover", "m": 512, "b": 16, "density": 0.25,
+         "n": 64, "est_tp_speedup": 2.0},
+        {"fig": "tp_crossover", "m": 1024, "b": 16, "density": 0.25,
+         "n": 64, "est_tp_speedup": 4.0},
+    ],
+    "dispatch": [
+        {"fig": "dispatch", "kind": "static", "m": 1024, "b": 16,
+         "density": 0.25, "n": 256, "chosen": "static_xla",
+         "candidates": {"static_xla": 10.0, "dense_xla": 40.0}},
+    ],
+}
+
+
+def _run(args, cwd=REPO):
+    return subprocess.run([sys.executable, SCRIPT] + args, cwd=cwd,
+                          capture_output=True, text=True)
+
+
+@pytest.fixture
+def setup(tmp_path):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    cur = tmp_path / "BENCH_x.json"
+    cur.write_text(json.dumps(BLOB))
+    (base_dir / "BENCH_x.json").write_text(json.dumps(BLOB))
+    return str(cur), str(base_dir)
+
+
+def test_identical_files_pass(setup):
+    cur, base_dir = setup
+    r = _run([cur, "--baseline-dir", base_dir])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_small_drift_within_tolerance_passes(setup, tmp_path):
+    cur, base_dir = setup
+    blob = copy.deepcopy(BLOB)
+    blob["tp_crossover"][0]["est_tp_speedup"] = 1.8     # -10% < 15%
+    cur2 = tmp_path / "BENCH_x.json"
+    cur2.write_text(json.dumps(blob))
+    assert _run([str(cur2), "--baseline-dir", base_dir]).returncode == 0
+
+
+def test_ratio_regression_fails(setup, tmp_path):
+    cur, base_dir = setup
+    blob = copy.deepcopy(BLOB)
+    blob["tp_crossover"][1]["est_tp_speedup"] = 3.0     # -25% > 15%
+    cur2 = tmp_path / "BENCH_x.json"
+    cur2.write_text(json.dumps(blob))
+    r = _run([str(cur2), "--baseline-dir", base_dir])
+    assert r.returncode == 1 and "regressed" in r.stdout
+
+
+def test_route_flip_fails(setup, tmp_path):
+    cur, base_dir = setup
+    blob = copy.deepcopy(BLOB)
+    blob["dispatch"][0]["chosen"] = "dense_xla"
+    blob["dispatch"][0]["candidates"]["dense_xla"] = 9.0
+    cur2 = tmp_path / "BENCH_x.json"
+    cur2.write_text(json.dumps(blob))
+    r = _run([str(cur2), "--baseline-dir", base_dir])
+    assert r.returncode == 1 and "crossover moved" in r.stdout
+
+
+def test_shrunk_grid_fails(setup, tmp_path):
+    cur, base_dir = setup
+    blob = copy.deepcopy(BLOB)
+    blob["tp_crossover"] = blob["tp_crossover"][:1]
+    cur2 = tmp_path / "BENCH_x.json"
+    cur2.write_text(json.dumps(blob))
+    r = _run([str(cur2), "--baseline-dir", base_dir])
+    assert r.returncode == 1 and "missing from current" in r.stdout
+
+
+def test_missing_baseline_fails_and_update_creates_it(tmp_path):
+    cur = tmp_path / "BENCH_y.json"
+    cur.write_text(json.dumps(BLOB))
+    base_dir = str(tmp_path / "empty")
+    r = _run([str(cur), "--baseline-dir", base_dir])
+    assert r.returncode == 1 and "missing baseline" in r.stdout
+    assert _run([str(cur), "--baseline-dir", base_dir,
+                 "--update"]).returncode == 0
+    assert _run([str(cur), "--baseline-dir", base_dir]).returncode == 0
+
+
+def test_committed_baselines_match_current_extractors():
+    """The baselines shipped in-repo parse through every extractor (a
+    schema drift in the suite must touch the baseline in the same PR)."""
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import bench_check
+    finally:
+        sys.path.pop(0)
+    for name in ("BENCH_dispatch.json", "BENCH_grouped_capacity.json",
+                 "BENCH_tp.json"):
+        path = os.path.join(REPO, "benchmarks", "baselines", name)
+        assert os.path.exists(path), f"{name} baseline not committed"
+        with open(path) as f:
+            blob = json.load(f)
+        ratios = {fig: ex(blob[fig]) for fig, ex in
+                  bench_check.EXTRACTORS.items() if fig in blob}
+        assert ratios and all(len(v) > 0 for v in ratios.values())
+        for per in ratios.values():
+            for rec in per.values():
+                assert rec["ratio"] > 0

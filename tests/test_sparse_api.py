@@ -2,6 +2,7 @@
 lifecycle, route parity, jit/grad/vmap safety, disk-cache round trip +
 stale invalidation, deprecation-shim parity, and the DynamicOperand
 grid/validation fixes that ride along."""
+import dataclasses
 import json
 import os
 
@@ -550,3 +551,169 @@ def test_engine_builds_plans_at_startup_and_stays_decision_free():
     # aggregated capacity/overflow telemetry rides along (per-plan
     # planned-bucket stats + MoE drops; totals always present)
     assert "totals" in rep["capacity"]
+
+
+# -- tensor-parallel plans: measured race, mesh-keyed cache, TP report --------
+
+NDEV = len(jax.devices())
+needs_mesh2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs >= 2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def test_static_tp_shardmap_mode_requires_concrete_mesh():
+    """tp_q alone can only execute the gspmd lowering; forcing the
+    shard_map route without a device-backed mesh is an error, not a
+    silent substitution."""
+    bsr, _, _ = _problem()
+    with pytest.raises(ValueError, match="static_tp_shardmap"):
+        sparse.plan(bsr, N, ctx=sparse.PlanContext(
+            mode="static_tp_shardmap", tp_q=4))
+
+
+def test_mesh_without_tp_axis_raises():
+    """Regression: a mesh whose axes do not include tp_axis used to
+    silently plan unsharded; it must raise naming the expected axis."""
+    bsr, _, _ = _problem()
+    mesh = jax.make_mesh((1,), ("x",))
+    with pytest.raises(ValueError, match=r"tp_axis 'model'"):
+        sparse.plan(bsr, N, ctx=sparse.PlanContext(mesh=mesh))
+    # naming the right axis (or an explicit tp_q) fixes it
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mesh=mesh,
+                                                   tp_axis="x"))
+    assert p.executable
+
+
+def test_tp_decision_surfaced_in_explain_and_report():
+    bsr, x, oracle = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext(mode="static_tp",
+                                                   tp_q=4,
+                                                   tp_balanced=False))
+    tp = p.explain()["tp"]
+    assert tp["chosen"] == "static_tp" and tp["q"] == 4
+    assert tp["balanced"] is False and p.artifacts["tp_balanced"] is False
+    np.testing.assert_allclose(np.asarray(p(bsr.values, x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+    rep = sparse.tp_report()
+    assert rep["totals"]["tp_planned"] == 1
+    assert rep["totals"]["tp_chosen"] == 1
+    assert "tp:" in sparse.format_plan(p)
+
+
+@needs_mesh2
+def test_tp_measured_race_gspmd_vs_shardmap_vs_unsharded():
+    """The ROADMAP acceptance: with a real mesh, plan() races both TP
+    lowerings against the unsharded candidates with wall-clock timings
+    and surfaces the crossover."""
+    bsr, x, oracle = _problem()
+    mesh = jax.make_mesh((NDEV,), ("model",))
+    p = sparse.plan(bsr, N, x=x,
+                    ctx=sparse.PlanContext(mesh=mesh, measure=True))
+    assert p.source == "measured"
+    assert {"static_tp", "static_tp_shardmap"} <= set(p.est_seconds)
+    tp = p.artifacts["tp"]
+    assert tp["source"] == "measured" and tp["mesh"] == {"model": NDEV}
+    assert tp["tp_speedup_vs_unsharded"] is not None
+    assert tp["best_tp_route"] in sparse.TP_ROUTES
+    # whatever route won the race, the numbers are right
+    np.testing.assert_allclose(np.asarray(p.apply(bsr, x)),
+                               np.asarray(oracle), rtol=1e-4, atol=1e-4)
+
+
+@needs_mesh2
+def test_tp_verdict_disk_round_trip_is_mesh_keyed(tmp_path):
+    """A measured TP verdict persists, restarts re-plan with zero
+    measurements, and a different mesh topology never reuses it."""
+    bsr, x, _ = _problem()
+    mesh = jax.make_mesh((NDEV,), ("model",))
+    ctx = sparse.PlanContext(mesh=mesh, measure=True,
+                             cache_dir=str(tmp_path))
+    p1 = sparse.plan(bsr, N, x=x, ctx=ctx)
+    assert sparse.cache_stats()["measurements"] >= 1
+
+    sparse.reset()                        # fresh-process simulation
+    p2 = sparse.plan(bsr, N, x=x, ctx=ctx)
+    assert p2.from_disk and p2.route == p1.route
+    assert sparse.cache_stats()["measurements"] == 0
+    assert p2.artifacts["tp"]["mesh"] == {"model": NDEV}
+
+    # same devices arranged as a different topology -> different key
+    sub = jax.make_mesh((1, NDEV), ("data", "model"))
+    sparse.reset()
+    p3 = sparse.plan(bsr, N, x=x,
+                     ctx=dataclasses.replace(ctx, mesh=sub))
+    assert not p3.from_disk
+
+
+def test_pre_tp_schema_cache_invalidated(tmp_path):
+    """A v2 (pre-mesh-fingerprint) cache file must be ignored: its TP
+    verdicts were keyed on (q, axis) only and could answer for the
+    wrong mesh topology."""
+    bsr, x, _ = _problem()
+    ctx = sparse.PlanContext(mode="static_tp", tp_q=4,
+                             cache_dir=str(tmp_path))
+    key = sparse.plan(bsr, N, ctx=ctx).key
+    sparse.reset()
+    os.remove(os.path.join(
+        str(tmp_path), f"sparse-plans-v{sparse.SCHEMA_VERSION}.json"))
+    old = {"env": {"schema": 2, "backend": jax.default_backend(),
+                   "jax": jax.__version__},
+           "entries": {key: {"route": "static_xla",
+                             "source": "measured", "est_seconds": {}}}}
+    with open(os.path.join(str(tmp_path), "sparse-plans-v2.json"),
+              "w") as f:
+        json.dump(old, f)
+    p = sparse.plan(bsr, N, ctx=ctx)
+    assert not p.from_disk                    # old tag never satisfies
+    assert p.route == "static_tp"
+
+
+def test_tp_q_and_mesh_fingerprints_differ():
+    """A tp_q-only plan (no mesh) and a mesh-backed plan of the same q
+    must not share a memory-cache entry."""
+    bsr, _, _ = _problem()
+    import importlib
+    plan_mod = importlib.import_module("repro.sparse.plan")
+    spec = sparse.OpSpec.from_operand(bsr, N, mode="auto")
+    fp_q = plan_mod._fingerprint(spec, sparse.PlanContext(tp_q=2))
+    mesh = jax.make_mesh((1,), ("model",))
+    fp_mesh = plan_mod._fingerprint(
+        spec, sparse.PlanContext(mesh=mesh, tp_q=2))
+    assert fp_q != fp_mesh
+
+
+@needs_mesh2
+def test_tp_race_remeasures_stale_analytic_unsharded_verdict():
+    """A traced first plan leaves an *analytic* unsharded verdict in
+    the decision cache under the measure=True key; a later concrete
+    plan must re-measure that side rather than race model-seconds
+    against wall-clock TP timings (incomparable units)."""
+    bsr1, x, _ = _problem(seed=0)
+    bsr2 = _bsr(seed=7)                   # same shapes, fresh pattern
+    mesh = jax.make_mesh((NDEV,), ("model",))
+    ctx = sparse.PlanContext(mesh=mesh, measure=True)
+    p1 = sparse.plan(bsr1, N, ctx=ctx)    # no x -> analytic, cached
+    assert p1.source == "analytic"
+    p2 = sparse.plan(bsr2, N, x=x, ctx=ctx)
+    assert p2.source == "measured"
+    un = p2.artifacts["tp"]["best_unsharded_route"]
+    # the unsharded side was wall-clocked afresh, not replayed from the
+    # analytic decision-cache entry
+    assert p2.est_seconds[un] != p1.est_seconds[un]
+
+
+def test_abstract_mesh_plans_gspmd_only():
+    """An AbstractMesh (shape-only, no devices -- what tracing-time
+    warmup sees) must plan fine with the shard_map route excluded, not
+    crash probing .devices."""
+    from jax.sharding import AbstractMesh
+    try:
+        amesh = AbstractMesh((8,), ("model",))
+    except TypeError:                     # older jax signature
+        amesh = AbstractMesh((("model", 8),))
+    bsr, _, _ = _problem()
+    ctx = sparse.PlanContext(mesh=amesh)
+    assert not ctx.shardmap_executable()
+    p = sparse.plan(bsr, N, ctx=ctx)
+    assert "static_tp_shardmap" not in p.est_seconds
+    assert "static_tp" in p.est_seconds   # gspmd candidate still raced

@@ -1,0 +1,169 @@
+"""Benchmark regression gate: compare a fresh BENCH_*.json against the
+committed baseline and fail on a >tolerance regression of any checked
+ratio.
+
+    PYTHONPATH=src python tools/bench_check.py \
+        experiments/bench/BENCH_dispatch.json \
+        experiments/bench/BENCH_grouped_capacity.json \
+        experiments/bench/BENCH_tp.json [--tolerance 0.15] [--update]
+
+Baselines live in ``benchmarks/baselines/<same file name>`` and are
+committed; ``--update`` rewrites them from the current files (do this
+deliberately, in the PR that changes the cost model or the planner, so
+the diff review *is* the regression sign-off).
+
+Checked ratios are the **deterministic** ones -- pure cost-model /
+planner outputs that move only when code changes, never with runner
+noise -- so a 15% tolerance is a real gate, not flake insurance:
+
+* ``dispatch``          speedup of the chosen route vs dense_xla
+                        (candidates are analytic estimates), plus the
+                        chosen route itself (a route flip at the same
+                        grid point is exactly the crossover regression
+                        this gate exists to catch);
+* ``grouped_capacity``  ``speedup_vs_worst`` of the planned bucket;
+* ``tp_crossover``      ``est_tp_speedup`` (analytic TP-vs-unsharded
+                        ratio at q=8).  Measured wall-clock fields are
+                        deliberately NOT gated.
+
+A config present in the baseline but missing from the current run (or
+vice versa) fails: a silently shrunk grid is a coverage regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "..",
+                            "benchmarks", "baselines")
+
+
+def _key(rec: dict, fields: tuple) -> str:
+    return "|".join(f"{f}={rec[f]}" for f in fields)
+
+
+def _dispatch_ratios(recs):
+    out = {}
+    for r in recs:
+        k = _key(r, ("kind", "m", "b", "density", "n"))
+        cands = r["candidates"]
+        dense = cands.get("dense_xla")
+        chosen = cands.get(r["chosen"])
+        if dense and chosen:
+            out[k] = {"ratio": dense / chosen, "route": r["chosen"]}
+    return out
+
+
+def _capacity_ratios(recs):
+    return {_key(r, ("m", "b", "density", "headroom")):
+            {"ratio": r["speedup_vs_worst"]} for r in recs}
+
+
+def _tp_ratios(recs):
+    return {_key(r, ("m", "b", "density", "n")):
+            {"ratio": r["est_tp_speedup"]} for r in recs}
+
+
+EXTRACTORS = {
+    "dispatch": _dispatch_ratios,
+    "grouped_capacity": _capacity_ratios,
+    "tp_crossover": _tp_ratios,
+}
+
+# runner-dependent fields stripped from baselines on --update, so a
+# baseline regenerated on a laptop diffs cleanly against one from CI
+# (the gate never reads these; `dispatch` keeps chosen/source -- they
+# are deterministic analytic outputs and chosen IS gate-checked)
+STRIP_FIELDS = {
+    "dispatch": (),
+    "grouped_capacity": ("t_planned_us", "t_worst_us"),
+    "tp_crossover": ("measured_us", "tp_speedup_measured",
+                     "tp_wins_measured", "chosen", "source",
+                     "q_measured"),
+}
+
+
+def check_file(current_path: str, baseline_path: str,
+               tolerance: float) -> list:
+    """-> list of failure strings (empty == pass)."""
+    with open(current_path) as f:
+        current = json.load(f)
+    if not os.path.exists(baseline_path):
+        return [f"missing baseline {baseline_path} -- run with --update "
+                f"and commit it"]
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = []
+    for fig, extract in EXTRACTORS.items():
+        cur, base = current.get(fig), baseline.get(fig)
+        if cur is None and base is None:
+            continue
+        if cur is None or base is None:
+            failures.append(f"{fig}: present in only one of "
+                            f"current/baseline")
+            continue
+        cur_r, base_r = extract(cur), extract(base)
+        for k in sorted(set(base_r) | set(cur_r)):
+            if k not in cur_r:
+                failures.append(f"{fig}[{k}]: missing from current run")
+                continue
+            if k not in base_r:
+                failures.append(f"{fig}[{k}]: not in baseline -- "
+                                f"grid changed? --update the baseline")
+                continue
+            b, c = base_r[k], cur_r[k]
+            if c["ratio"] < b["ratio"] * (1.0 - tolerance):
+                failures.append(
+                    f"{fig}[{k}]: ratio {c['ratio']:.3f} regressed "
+                    f">{tolerance:.0%} from baseline {b['ratio']:.3f}")
+            if b.get("route") and c.get("route") != b.get("route"):
+                failures.append(
+                    f"{fig}[{k}]: chosen route {c.get('route')} != "
+                    f"baseline {b['route']} (crossover moved)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+",
+                    help="fresh BENCH_*.json files to check")
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from the current files")
+    args = ap.parse_args()
+
+    rc = 0
+    for path in args.files:
+        baseline = os.path.join(args.baseline_dir, os.path.basename(path))
+        if args.update:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            with open(path) as f:
+                blob = json.load(f)
+            # strip runner-dependent fields: baselines hold only what
+            # the gate checks, so their diffs review cleanly
+            for fig, recs in blob.items():
+                drop = STRIP_FIELDS.get(fig)
+                if drop:
+                    blob[fig] = [{k: v for k, v in r.items()
+                                  if k not in drop} for r in recs]
+            with open(baseline, "w") as f:
+                json.dump(blob, f, indent=1)
+            print(f"updated {baseline}")
+            continue
+        failures = check_file(path, baseline, args.tolerance)
+        tag = os.path.basename(path)
+        if failures:
+            rc = 1
+            print(f"[{tag}] FAIL ({len(failures)} regressions):")
+            for msg in failures:
+                print(f"  {msg}")
+        else:
+            print(f"[{tag}] OK (within {args.tolerance:.0%} of baseline)")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
