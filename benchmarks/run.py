@@ -46,6 +46,11 @@ CLAIMS = {
                     "the unsharded route as m grows; the verdict is "
                     "measured (gspmd vs shard_map vs unsharded race), "
                     "not modeled",
+    "train_grad": "paper §3.2 extended to training: the backward "
+                  "products (transposed-pattern SpMM + block SDDMM) "
+                  "ride the same pre-planned fast path as the forward, "
+                  "so the fwd+bwd triple beats the dense triple at low "
+                  "density and the win grows as density falls",
 }
 
 
@@ -119,6 +124,30 @@ def _check(fig, recs):
             f"b={best['b']} d={best['density']:.4f} "
             f"headroom={best['headroom']}, P[overflow]="
             f"{best['overflow_p']})")
+    if fig == "train_grad":
+        # fwd+bwd speedup grows as density falls per (m, b), and sparse
+        # training must win somewhere at d<=1/16 with b>=16; the dL/dW
+        # verdict must leave the dense product at the lowest density
+        by = {}
+        for r in recs:
+            by.setdefault((r["m"], r["b"]), []).append(
+                (r["density"], r["train_speedup_vs_dense"]))
+        mono = all(b2 >= a2 * 0.999 for series in by.values()
+                   for (_, a2), (_, b2) in
+                   zip(sorted(series, reverse=True),
+                       sorted(series, reverse=True)[1:]))
+        wins = [r for r in recs if r["density"] <= 1 / 16
+                and r["b"] >= 16 and r["train_speedup_vs_dense"] > 1.0]
+        lowd = [r for r in recs
+                if r["density"] == min(x["density"] for x in recs)]
+        sparse_dw = any(r["dv_route"] != "sddmm_dense" for r in lowd)
+        best = max(recs, key=lambda r: r["train_speedup_vs_dense"])
+        return bool(wins) and mono and sparse_dw, (
+            f"{len(wins)} fwd+bwd wins at d<=1/16 b>=16 (best "
+            f"{best['train_speedup_vs_dense']}x at m={best['m']} "
+            f"b={best['b']} d={best['density']:.4f}: "
+            f"fwd={best['fwd_route']} dx={best['dx_route']} "
+            f"dW={best['dv_route']})")
     if fig == "tp_crossover":
         # deterministic side: analytic TP speedup grows with m per
         # (density, n) and crosses 1 somewhere on the grid; measured

@@ -389,6 +389,60 @@ def tp_crossover(tiny: bool = False):
     return recs
 
 
+# -- train_grad: the training step's three products as planned decisions ------------------
+
+def train_grad(tiny: bool = False):
+    """Sparse *training* as the plan layer prices it: one static spmm
+    plan per grid point with the planned backward attached, recording
+    the chosen forward route plus the backward verdicts (dL/dx =
+    transposed-pattern SpMM, dL/dvalues = block SDDMM) and the analytic
+    fwd+bwd speedup over computing the same three products densely.
+    ``speedup > 1`` at low density is the training extension of the
+    paper's Table 3 claim: with the pattern fixed at compile time, the
+    *backward* matmuls ride the same pre-planned fast path as the
+    forward.  All gated ratios are deterministic cost-model outputs.
+    ``tiny=True`` is the CI smoke grid that seeds BENCH_train_grad.json.
+    """
+    from repro import sparse
+    recs = []
+    # differentiable (the default) + allow_pallas: the plan-level
+    # custom_vjp makes Pallas forwards admissible for training callers
+    ctx = sparse.PlanContext(allow_pallas=True)
+    key = jax.random.PRNGKey(0)
+    n = 256
+    ms = (1024,) if tiny else (1024, 4096)
+    # the fwd+bwd crossover sits below the forward-only one (three
+    # products, one of them a dense-competitive SDDMM): the grid reaches
+    # 1/64 (tiny) / 1/256 (full) where the backward race leaves dense
+    ds = (1 / 16, 1 / 64) if tiny else (1 / 4, 1 / 16, 1 / 64, 1 / 256)
+    for m in ms:
+        for b in (4, 16):
+            for d in ds:
+                bsr = BlockSparseMatrix.random(key, m, m, b, d)
+                p = sparse.plan(bsr, n, ctx=ctx)
+                g = p.explain()["grad"]
+                dx, dv = g["dx"], g["dvalues"]
+                fwd_t = p.est_seconds[p.route]
+                dx_t = dx["est_seconds"][dx["route"]]
+                dv_t = dv["est_seconds"][dv["route"]]
+                dense_fwd = dispatch._estimate("dense_xla", m, m, n, b,
+                                               d, "float32")
+                dense_dw = dispatch._estimate("sddmm_dense", m, m, n, b,
+                                              d, "float32")
+                # dense dL/dx is another [m, m] @ [m, n] product
+                sparse_t = fwd_t + dx_t + dv_t
+                dense_t = 2 * dense_fwd + dense_dw
+                recs.append(dict(
+                    fig="train_grad", m=m, b=b, density=d, n=n,
+                    fwd_route=p.route, dx_route=dx["route"],
+                    dv_route=dv["route"],
+                    fwd_us=round(fwd_t * 1e6, 3),
+                    dx_us=round(dx_t * 1e6, 3),
+                    dv_us=round(dv_t * 1e6, 3),
+                    train_speedup_vs_dense=round(dense_t / sparse_t, 3)))
+    return recs
+
+
 # -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
 
 def occupancy_study():
@@ -417,7 +471,9 @@ ALL = {
     "dispatch": dispatch_decisions,
     "grouped_capacity": grouped_capacity,
     "tp_crossover": tp_crossover,
+    "train_grad": train_grad,
 }
 
 # experiments with a reduced CI smoke grid (benchmarks.run --tiny)
-TINY_CAPABLE = ("dispatch", "grouped_capacity", "tp_crossover")
+TINY_CAPABLE = ("dispatch", "grouped_capacity", "tp_crossover",
+                "train_grad")

@@ -72,6 +72,16 @@ ROUTES = ("dense_xla", "dense_pallas", "static_xla", "static_pallas",
           "dynamic_xla", "dynamic_pallas", "dynamic_grouped")
 MODES = ("auto", "dense", "static", "dynamic") + ROUTES
 
+# backward-only route vocabulary: the dL/dvalues product of a static
+# sparse matmul is a block-sampled dense-dense matmul (SDDMM) -- a
+# different op shape than SpMM, so it carries its own route ids.  The
+# dL/dx product is an SpMM on the transposed pattern and reuses ROUTES.
+#   sddmm_xla      static_sparse make_sddmm gather/einsum formulation
+#   sddmm_grouped  kernels/sddmm tile-grid Pallas kernel (plan_packing
+#                  metadata; gated like the other Pallas routes)
+#   sddmm_dense    full dense dY @ X^T then gather the pattern blocks
+SDDMM_ROUTES = ("sddmm_xla", "sddmm_grouped", "sddmm_dense")
+
 
 # ---------------------------------------------------------------------------
 # Context
@@ -134,7 +144,10 @@ def _pallas_ok(ctx: DispatchContext) -> bool:
     TPU backend (or an explicit allow_pallas=True, e.g. for analytic
     what-would-run reports) AND a forward-only caller: the Pallas
     kernels define no VJPs, so differentiable call sites must stay on
-    the XLA routes."""
+    the XLA routes.  (The plan layer -- ``repro.sparse`` -- registers a
+    plan-level ``custom_vjp`` with planned backward products, so
+    *plans* admit Pallas forwards for differentiable callers; this
+    dispatch-level gate covers the raw shim entry points only.)"""
     if ctx.differentiable:
         return False
     if ctx.allow_pallas is not None:
@@ -236,15 +249,48 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
     """Estimated seconds for one route on the TPU target.  XLA and Pallas
     variants of a family share the kernel-structure estimate; the XLA
     variant carries a small constant penalty so that on equal footing the
-    purpose-built kernel wins (mirrors measured behaviour)."""
+    purpose-built kernel wins (mirrors measured behaviour).
+
+    SDDMM routes price the backward dL/dW product: a block-sampled
+    ``dY[m, n] @ X[k, n]^T`` at block density ``d`` (the contraction is
+    over ``n``, the sampled output is the ``[m, k]`` pattern grid)."""
     bytes_el = max(1, jnp.dtype(dtype).itemsize)
     fp32 = jnp.dtype(dtype).itemsize >= 4
     cm = _cost_model()
     if cm is None:
-        t = _roofline_fallback(route, m, k, n, b, density, bytes_el)
+        fam = {"sddmm_dense": "dense", "sddmm_grouped": "static",
+               "sddmm_xla": "dynamic"}.get(route, route)
+        t = _roofline_fallback(fam, m, k, n, b, density, bytes_el)
         return t * (4.0 if fp32 else 1.0) * \
             (1.15 if route.endswith("_xla") else 1.0)
     db = cm.B32 if fp32 else cm.B16
+    if route in SDDMM_ROUTES:
+        if route == "sddmm_dense":
+            # full [m, n] @ [n, k] product; the pattern gather is noise
+            t = cm.dense_time(m, n, k, dtype_bytes=db)
+        elif route == "sddmm_grouped":
+            # tile-grid kernel: one (t, tn) x (t, tn)^T accumulation
+            # chain per non-empty pattern tile (kernels/sddmm)
+            tiles = _expected_tiles(m, k, b, density)
+            tn = min(512, n)
+            steps = tiles * math.ceil(n / tn)
+            per_step = max(cm._mxu_cycles(128, tn, 128),
+                           cm._bytes_cycles(2 * 128 * tn * db))
+            t = cm.KernelTime(steps * per_step,
+                              2.0 * m * k * n * density)
+        else:
+            # sddmm_xla: logical-block gather/einsum walk -- b-granular
+            # MXU passes, like the dynamic slot walk
+            slots = max(1, math.ceil((m // b) * (k // b) * density))
+            tn = min(512, n)
+            steps = slots * math.ceil(n / tn)
+            per_step = max(cm._mxu_cycles(b, tn, b),
+                           cm._bytes_cycles(2 * b * tn * db, cm.VMEM_BW))
+            t = cm.KernelTime(steps * per_step,
+                              2.0 * m * k * n * density)
+        if fp32:
+            t = cm.fp32_time(t)
+        return t.seconds * (1.15 if route.endswith("_xla") else 1.0)
     if route.startswith("dense"):
         t = cm.dense_time(m, k, n, dtype_bytes=db)
     elif route == "dynamic_grouped":
@@ -424,9 +470,21 @@ def _executable(route: str, ctx: DispatchContext) -> bool:
     """Can this host actually run the route?  Pallas needs a TPU (or
     interpret mode); analytic candidates from allow_pallas=True
     what-would-run reports are not executable off-TPU."""
-    if route.endswith("_xla"):
+    if route.endswith("_xla") or route == "sddmm_dense":
         return True
     return ctx.interpret or jax.default_backend() == "tpu"
+
+
+def sddmm_candidates(ctx: DispatchContext) -> Tuple[str, ...]:
+    """Admissible dL/dvalues (block-SDDMM) backward routes.  The
+    backward products run inside a plan-level ``custom_vjp`` and are
+    never differentiated again, so the Pallas kernel is gated only on
+    the backend, not on ``ctx.differentiable``."""
+    cands = ["sddmm_xla", "sddmm_dense"]
+    fwd_only = dataclasses.replace(ctx, differentiable=False)
+    if _pallas_ok(fwd_only):
+        cands.insert(1, "sddmm_grouped")
+    return tuple(cands)
 
 
 def measure_callable(fn, *args, reps: int = 3) -> float:
@@ -501,8 +559,9 @@ def spmm(operand: Operand, x: jax.Array, *,
     shim builds (or fetches from the plan cache) that plan and calls it,
     so behaviour and numerics match the plan path exactly.
 
-    Differentiable w.r.t. the operand values and ``x`` on every XLA
-    route (the Pallas routes are forward-only kernels)."""
+    Differentiable w.r.t. the operand values and ``x`` on every route:
+    the plan layer attaches a planned backward (transposed-SpMM +
+    SDDMM custom_vjp) when ``ctx.differentiable`` is set."""
     ctx = ctx or current_ctx()
     _, _, k, _, _ = _normalize(operand)
     if x.ndim != 2:

@@ -167,6 +167,45 @@ def pack_tiles(bsr: BlockSparseMatrix, tm: int = 128, tk: int = 128) -> TilePack
     return packing
 
 
+@dataclasses.dataclass(frozen=True)
+class TransposePlan:
+    """One-time host analysis of a pattern's transpose (plan-first
+    contract): the backward transposed-SpMM plans run on ``W^T``'s
+    pattern, which is the same nnz blocks re-sorted row-major in
+    ``(col, row)`` coordinates with each block transposed.  ``perm`` is
+    the value permutation (applied per call while weights train);
+    ``row_idx``/``col_idx`` are the transposed pattern's host metadata.
+    """
+
+    perm: np.ndarray        # [nnz] source block for transposed slot z
+    row_idx: np.ndarray     # [nnz] int32 (block rows of W^T == cols of W)
+    col_idx: np.ndarray     # [nnz] int32 (block cols of W^T == rows of W)
+    shape: Tuple[int, int]  # (k, m) -- the transposed logical shape
+    block_size: int
+
+
+def plan_transpose(row_idx: np.ndarray, col_idx: np.ndarray,
+                   shape: Tuple[int, int],
+                   block_size: int) -> TransposePlan:
+    """Pattern phase of the backward transpose: computed once per
+    pattern, shared by every sibling dL/dx plan on it.  The value phase
+    (``values[perm].transpose(0, 2, 1)``) is a per-call device gather."""
+    rows = np.asarray(row_idx, np.int64)
+    cols = np.asarray(col_idx, np.int64)
+    perm = np.lexsort((rows, cols))      # row-major in (col, row) coords
+    m, k = shape
+    return TransposePlan(perm, cols[perm].astype(np.int32),
+                         rows[perm].astype(np.int32), (k, m), block_size)
+
+
+def apply_transpose(plan: TransposePlan, values) -> jax.Array:
+    """Value phase: permute the ``[nnz, b, b]`` blocks into the
+    transposed pattern's row-major order and transpose each block.
+    Jit-compatible (metadata is host constants)."""
+    vals = jnp.asarray(values)
+    return vals[jnp.asarray(plan.perm)].transpose(0, 2, 1)
+
+
 def balanced_k_splits(block_mask: np.ndarray, q: int) -> np.ndarray:
     """Choose ``q`` *uneven* split positions over block-columns balancing nnz.
 

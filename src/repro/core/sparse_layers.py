@@ -46,6 +46,11 @@ class SparseLinear:
     use_bias: bool = False
     dtype: object = jnp.float32
     backend: str = "auto"     # dispatch mode ("auto" / route id / family)
+    # backward route policies for the plan-level custom_vjp (training
+    # runs the planned transposed-SpMM + SDDMM siblings; "auto" races
+    # the candidates, a route id forces one -- see PlanContext)
+    grad_backend: str = "auto"
+    sddmm_backend: str = "auto"
 
     def __post_init__(self):
         ob, ib = self.out_features // self.block_size, \
@@ -84,9 +89,12 @@ class SparseLinear:
 
     def _plan_ctx(self):
         from repro import sparse as sparse_api
-        if self.backend in ("xla", "pallas"):    # historical spellings
-            return sparse_api.PlanContext(mode=f"static_{self.backend}")
-        return sparse_api.PlanContext(mode=self.backend)
+        mode = (f"static_{self.backend}"
+                if self.backend in ("xla", "pallas")  # historical names
+                else self.backend)
+        return sparse_api.PlanContext(mode=mode,
+                                      grad_mode=self.grad_backend,
+                                      sddmm_mode=self.sddmm_backend)
 
     def apply(self, params, x: jax.Array) -> jax.Array:
         # plan-first: the pattern analysis + route decision happen once

@@ -103,6 +103,29 @@ def make_spmm(row_idx: np.ndarray, col_idx: np.ndarray,
     return spmm
 
 
+def make_spmm_t(row_idx: np.ndarray, col_idx: np.ndarray,
+                grid: Tuple[int, int], block_size: int):
+    """Build ``(values, dy) -> (M⊙W)^T @ dY`` for a fixed pattern -- the
+    dL/dx backward product, promoted to a first-class builder so the
+    plan layer can race it as a dispatch candidate (the transposed-SpMM
+    half of sparse training, paper §3.2)."""
+    kw = dict(row_idx=np.asarray(row_idx, np.int32),
+              col_idx=np.asarray(col_idx, np.int32), grid=grid,
+              block_size=block_size)
+    return lambda values, dy: _spmm_t_impl(values, dy, **kw)
+
+
+def make_sddmm(row_idx: np.ndarray, col_idx: np.ndarray,
+               grid: Tuple[int, int], block_size: int):
+    """Build ``(dy, x) -> [nnz, b, b]`` block-sampled ``dY @ X^T`` for a
+    fixed pattern -- the dL/dvalues backward product (block SDDMM),
+    promoted like ``make_spmm_t`` for the backward dispatch race."""
+    kw = dict(row_idx=np.asarray(row_idx, np.int32),
+              col_idx=np.asarray(col_idx, np.int32), grid=grid,
+              block_size=block_size)
+    return lambda dy, x: _sddmm_impl(dy, x, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Public convenience API
 # ---------------------------------------------------------------------------

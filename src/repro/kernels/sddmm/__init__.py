@@ -1,0 +1,2 @@
+from repro.kernels.sddmm.ops import grouped_sddmm, sddmm_tile_size  # noqa: F401
+from repro.kernels.sddmm.ref import sddmm_ref  # noqa: F401

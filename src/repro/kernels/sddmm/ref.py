@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the block-sampled dense-dense matmul (SDDMM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sddmm_ref(row_idx, col_idx, dy, x, *, block_size: int):
+    """``dW[z] = dY_block[row[z]] @ X_block[col[z]]^T`` for every pattern
+    block -- the dense-compute reference: full ``dY @ X^T`` then gather
+    the pattern blocks."""
+    m, n = dy.shape
+    k = x.shape[0]
+    b = block_size
+    dw = jnp.dot(dy, x.T, preferred_element_type=jnp.float32)
+    blocked = dw.reshape(m // b, b, k // b, b).transpose(0, 2, 1, 3)
+    return blocked[jnp.asarray(row_idx), jnp.asarray(col_idx)]

@@ -118,11 +118,15 @@ class Engine:
         counters + aggregated capacity/overflow telemetry (per-plan
         planned-bucket stats and MoE routing drops) + every
         tensor-parallel decision (raced candidates, measured crossover)
-        -- the serving view of the plan-first lifecycle."""
+        + the per-plan forward/backward route table
+        (``sparse.plan_report()`` -- serving plans are forward-only, so
+        ``grad`` is absent here unless the engine shares a process with
+        training) -- the serving view of the plan-first lifecycle."""
         return {"startup": dict(self.plan_stats),
                 "now": sparse_api.cache_stats(),
                 "capacity": sparse_api.capacity_report(),
-                "tp": sparse_api.tp_report()}
+                "tp": sparse_api.tp_report(),
+                "plans": sparse_api.plan_report()}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: Request) -> bool:

@@ -34,6 +34,7 @@ from repro.sparse.plan import (  # noqa: F401
     format_plan,
     matmul,
     plan,
+    plan_report,
     record_dropped,
     reset,
     spmm,
@@ -44,6 +45,8 @@ from repro.sparse.plan import (  # noqa: F401
 from repro.sparse.spec import (  # noqa: F401
     CAPACITY_POLICIES,
     ESCALATION_MIN_CALLS,
+    GRAD_DX_MODES,
+    GRAD_SDDMM_MODES,
     CapacityStats,
     OpSpec,
     PlanContext,

@@ -39,7 +39,13 @@ import jax
 # tp_balanced) and the route vocabulary grew "static_tp_shardmap" -- a
 # v2 TP verdict was keyed on (q, axis) only, so it could answer for a
 # different mesh topology; v2 files are invalidated wholesale
-SCHEMA_VERSION = 3
+# v4: decision records grew a "grad" section (backward route verdicts:
+# the dL/dx transposed-SpMM route + the dL/dvalues SDDMM route, each
+# with source + est_seconds) and plan fingerprints grew the grad knobs
+# (grad_mode / sddmm_mode) -- a v3 record carries no backward verdicts,
+# so replaying one would silently re-race (or worse, skip) the backward
+# decisions a restart is entitled to; v3 files are invalidated wholesale
+SCHEMA_VERSION = 4
 
 _lock = threading.RLock()
 _configured_dir: Optional[str] = None

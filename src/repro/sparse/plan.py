@@ -14,8 +14,11 @@ sharding), route selection through the dispatch cost model (optionally
 wall-clock measured), dynamic bucket sizing (``planner.plan_dynamic``),
 and mesh-aware TP routes from ``core/tp.py``.  The result is a frozen
 ``MatmulPlan`` whose execute closure contains no decisions: safe under
-``jax.jit`` / ``grad`` / ``vmap`` (XLA routes), and a plain direct call
-in the steady state.
+``jax.jit`` / ``grad`` / ``vmap`` on every route -- differentiable
+plans carry a plan-level ``jax.custom_vjp`` whose backward runs two
+planned sibling products (transposed-pattern SpMM for dL/dx, block
+SDDMM for dL/dvalues), so even Pallas forwards train -- and a plain
+direct call in the steady state.
 
 Verdicts persist to a versioned on-disk cache (``sparse.cache``), so a
 serving restart re-plans without re-measuring.
@@ -63,6 +66,8 @@ def reset(*, counters: bool = True):
     with _plan_lock:
         _plan_cache.clear()
         _shard_meta_cache.clear()
+        _transpose_cache.clear()
+        _sddmm_meta_cache.clear()
     with _capacity_lock:
         _capacity_registry.clear()
     cache_lib.reset(counters=counters)
@@ -144,6 +149,40 @@ def tp_report() -> dict:
     }
 
 
+def plan_report() -> dict:
+    """Every plan this process holds, with its forward route AND its
+    backward (grad) route choices -- the one-stop training view of the
+    plan-first lifecycle.  ``grad.mode`` per plan is "planned" (the
+    plan-level custom_vjp runs the raced sibling products), "native"
+    (autodiff of the XLA formulation), or "unavailable" (forward-only
+    Pallas plan; differentiating raises)."""
+    with _plan_lock:
+        plans = list(_plan_cache.values())
+    per = {}
+    for p in plans:
+        grad = p.artifacts.get("grad")
+        per[p.key] = {
+            "route": p.route, "source": p.source,
+            "from_disk": p.from_disk, "op": p.spec.op,
+            "kind": p.spec.kind, "grad": grad,
+        }
+    planned = [r for r in per.values()
+               if (r["grad"] or {}).get("mode") == "planned"]
+    return {
+        "per_plan": per,
+        "totals": {
+            "plans": len(per),
+            "grad_planned": len(planned),
+            "grad_measured": sum(
+                1 for r in planned
+                if "dx" in r["grad"]
+                and r["grad"]["dx"].get("source") == "measured"),
+            "grad_from_disk": sum(1 for r in planned
+                                  if r["grad"].get("from_disk")),
+        },
+    }
+
+
 def configure(cache_dir: Optional[str] = None):
     """Set the process-default persistent cache directory."""
     cache_lib.configure(cache_dir)
@@ -215,8 +254,13 @@ class MatmulPlan:
         return self(payload_of(operand), x)
 
     def vjp(self, payload, x):
-        """``(y, vjp_fn)`` through the planned route (XLA routes only --
-        the Pallas kernels are forward-only)."""
+        """``(y, vjp_fn)`` through the planned route.  Plans built with
+        ``ctx.differentiable`` (the default) carry a plan-level
+        ``custom_vjp`` whose backward runs the planned sibling products
+        (transposed-SpMM dL/dx + block-SDDMM dL/dvalues -- see
+        ``explain()["grad"]``), so this works on every route, Pallas
+        included.  Forward-only plans raise a ValueError naming the
+        route and the ``mode=`` workaround when differentiated."""
         return jax.vjp(lambda v, xx: self(v, xx), payload, x)
 
     def explain(self) -> dict:
@@ -232,7 +276,8 @@ class MatmulPlan:
                         "dtype": s.dtype},
             "mode": s.mode,
             "op": s.op,
-            "pallas_admissible": dispatch._pallas_ok(self.ctx.dispatch_ctx()),
+            "pallas_admissible": dispatch._pallas_ok(
+                _selection_ctx(s, self.ctx)),
             "candidates": {r: self.est_seconds[r] for r in
                            sorted(self.est_seconds,
                                   key=self.est_seconds.get)},
@@ -242,6 +287,7 @@ class MatmulPlan:
             "from_disk": self.from_disk,
             "cache_key": self.key,
             "tp": self.artifacts.get("tp"),
+            "grad": self.artifacts.get("grad"),
             "plan": dict(self.artifacts, executable=self.executable),
             "capacity": (dict(self.artifacts.get("capacity", {}),
                               stats=self.capacity_stats.report())
@@ -282,6 +328,16 @@ def format_plan(plan: MatmulPlan) -> str:
             f"{tpd['tp_speedup_vs_unsharded']}x vs "
             f"{tpd['best_unsharded_route']}"
             + (" [past crossover]" if tpd["tp_wins"] else ""))
+    g = art.get("grad")
+    if g:
+        if g.get("mode") == "planned" and "dx" in g:
+            extra.append(
+                f"grad: dx={g['dx']['route']} "
+                f"dvalues={g['dvalues']['route']} "
+                f"({g['dx']['source']}"
+                + (", disk-cached" if g.get("from_disk") else "") + ")")
+        else:
+            extra.append(f"grad: {g.get('mode')}")
     if "grouped_tile" in art:
         t = art["grouped_tile"]
         cap = art.get("grouped_tiles_cap")   # exact for static kind
@@ -311,6 +367,29 @@ def format_plan(plan: MatmulPlan) -> str:
 # Decision (memory -> disk -> dispatch cost model / measurement)
 # ---------------------------------------------------------------------------
 
+def _grad_covered(spec: OpSpec, ctx: PlanContext) -> bool:
+    """Does this plan get the plan-level planned backward (custom_vjp
+    over sibling transposed-SpMM + SDDMM products)?  Static patterns
+    with a concrete-operand ``spmm`` op and a differentiable caller."""
+    return (ctx.differentiable and spec.op == "spmm"
+            and spec.kind == "static")
+
+
+def _selection_ctx(spec: OpSpec, ctx: PlanContext) -> dispatch.DispatchContext:
+    """The dispatch view used for *route selection*.  Plans with a
+    plan-level backward (static/dynamic spmm) register their own
+    ``custom_vjp``, so the forward kernel never needs a VJP of its own:
+    Pallas forwards are admissible even for differentiable plans (the
+    paper's fast path no longer falls away under training).  The plan
+    fingerprint still carries the caller's ``differentiable`` flag --
+    only the candidate gate is relaxed."""
+    dctx = ctx.dispatch_ctx()
+    if (dctx.differentiable and spec.op == "spmm"
+            and spec.kind in ("static", "dynamic")):
+        return dataclasses.replace(dctx, differentiable=False)
+    return dctx
+
+
 def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
     dctx = ctx.dispatch_ctx()
     base = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
@@ -331,7 +410,12 @@ def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
     # them; they key the in-memory plan cache instead (see plan()).
     cap = (("cap", ctx.resolved_headroom(), ctx.capacity_policy)
            if spec.kind == "dynamic" else ())
-    return ("plan", spec.op, spec.mode) + base + tp + cap
+    # the backward verdicts ride in the same record, so the backward
+    # policy knobs are part of the plan identity: a plan whose dL/dx was
+    # forced onto dynamic_xla must not answer for a grad_mode="auto" one
+    grad = (("grad", ctx.grad_mode, ctx.sddmm_mode)
+            if _grad_covered(spec, ctx) else ())
+    return ("plan", spec.op, spec.mode) + base + tp + cap + grad
 
 
 def _tp_estimate(spec: OpSpec, q: int,
@@ -427,16 +511,18 @@ def _measure_tp_route(route: str, spec: OpSpec, ctx: PlanContext,
 
 def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
             x) -> Tuple[str, Dict[str, float], str, bool, Optional[dict],
-                        Optional[str]]:
+                        Optional[str], Optional[dict]]:
     """-> (route, est_seconds, source, from_disk, disk_capacity,
-    tp_source).  ``tp_source`` labels the TP candidates' entries in
-    ``est_seconds`` separately from the overall verdict: the unsharded
-    side can be measured while the TP side stayed analytic (abstract
-    inputs + a decision-cache replay), and the report must never call
-    that ratio 'measured'.  The verdict is persisted by ``plan()`` (one
-    store, after the executor -- and its capacity section -- are
-    built)."""
-    dctx = ctx.dispatch_ctx()
+    tp_source, disk_grad).  ``tp_source`` labels the TP candidates'
+    entries in ``est_seconds`` separately from the overall verdict: the
+    unsharded side can be measured while the TP side stayed analytic
+    (abstract inputs + a decision-cache replay), and the report must
+    never call that ratio 'measured'.  ``disk_grad`` is the persisted
+    backward-verdict section (dL/dx + dL/dvalues routes), replayed so a
+    restart re-plans fwd+bwd with zero measurements.  The verdict is
+    persisted by ``plan()`` (one store, after the executor -- and its
+    capacity and grad sections -- are built)."""
+    dctx = _selection_ctx(spec, ctx)
     key = cache_lib.key_string(_fingerprint(spec, ctx))
     use_disk = ctx.cache and ctx.persistence_on()
     if use_disk:
@@ -445,7 +531,8 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
             return (rec["route"], dict(rec.get("est_seconds", {})),
                     rec.get("source", "analytic"), True,
                     rec.get("capacity"),
-                    rec.get("tp_source", rec.get("source")))
+                    rec.get("tp_source", rec.get("source")),
+                    rec.get("grad"))
 
     cache_lib.bump("decisions")
     q = ctx.resolved_tp_q()
@@ -480,7 +567,7 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
             cache_lib.bump("measurements")
             source = "measured"
         route = min(est, key=est.get)
-        return route, est, source, False, None, source
+        return route, est, source, False, None, source, None
 
     if operand is not None:
         dkey = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
@@ -543,7 +630,7 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
             # overturn (or lose to) numbers of a different unit
             route = min(tp_routes, key=est.get)
 
-    return route, est, source, False, None, tp_source
+    return route, est, source, False, None, tp_source, None
 
 
 def _tp_decision(ctx: PlanContext, route: str, est: Dict[str, float],
@@ -782,6 +869,342 @@ def _dense_executor(spec: OpSpec, route: str, ctx: PlanContext):
                                          interpret=interpret)), art
 
 
+# ---------------------------------------------------------------------------
+# Planned backward (the differentiable-plans tentpole): every executable
+# spmm plan carries a plan-level jax.custom_vjp whose backward runs two
+# sibling products chosen by the same decide/measure/persist machinery
+# as the forward --
+#
+#   dL/dx       an SpMM on the *transposed* pattern (partitioner
+#               metadata transposed once per pattern, cached), raced
+#               over the dispatch route vocabulary;
+#   dL/dvalues  a block SDDMM (static_sparse.make_sddmm, the
+#               kernels/sddmm grouped tile kernel, or the dense
+#               product), raced over dispatch.SDDMM_ROUTES.
+#
+# Verdicts join the persistent decision record under a "grad" section,
+# so a training restart re-plans fwd+bwd with zero measurements.
+# ---------------------------------------------------------------------------
+
+_transpose_cache: Dict[tuple, partitioner.TransposePlan] = {}
+_sddmm_meta_cache: Dict[tuple, partitioner.PackingPlan] = {}
+
+
+def _transpose_plan_for(operand: BlockSparseMatrix) -> partitioner.TransposePlan:
+    pk = pattern_key(operand)
+    key = (pk, operand.shape, operand.block_size)
+    with _plan_lock:
+        tp = _transpose_cache.get(key)
+    if tp is None:
+        tp = partitioner.plan_transpose(operand.row_idx, operand.col_idx,
+                                        operand.shape, operand.block_size)
+        with _plan_lock:
+            tp = _transpose_cache.setdefault(key, tp)
+    return tp
+
+
+def _sddmm_meta_for(operand: BlockSparseMatrix,
+                    t: int) -> partitioner.PackingPlan:
+    pk = pattern_key(operand)
+    key = (pk, operand.shape, operand.block_size, t)
+    with _plan_lock:
+        meta = _sddmm_meta_cache.get(key)
+    if meta is None:
+        meta = partitioner.plan_packing(
+            np.asarray(operand.row_idx), np.asarray(operand.col_idx),
+            operand.shape, operand.block_size, t, t)
+        with _plan_lock:
+            meta = _sddmm_meta_cache.setdefault(key, meta)
+    return meta
+
+
+def _dx_closure(route: str, spec: OpSpec, ctx: PlanContext,
+                operand: BlockSparseMatrix):
+    """(values, dy) -> dL/dx for one candidate route: the forward
+    executor vocabulary applied to the transposed pattern (value phase:
+    permute + per-block transpose, a device gather per call)."""
+    tplan = _transpose_plan_for(operand)
+    spec_t = OpSpec(kind="static", m=spec.k, k=spec.m, n=spec.n,
+                    block_size=spec.block_size, density=spec.density,
+                    dtype=spec.dtype, op="spmm", mode="auto")
+    # the executor arms close over the pattern metadata only and take
+    # values per call, so any same-shape array works as the placeholder
+    # -- the live values are re-permuted in run() below
+    bsr_t = BlockSparseMatrix(operand.values, tplan.row_idx,
+                              tplan.col_idx, tplan.shape,
+                              tplan.block_size)
+    inner, _ = _static_executor(spec_t, route, ctx, bsr_t)
+    perm = jnp.asarray(tplan.perm)
+
+    def run(v, dy):
+        v_t = jnp.asarray(v)[perm].transpose(0, 2, 1)
+        return inner(v_t, dy)
+    return run
+
+
+def _dv_closure(route: str, spec: OpSpec, ctx: PlanContext,
+                operand: BlockSparseMatrix):
+    """(dy, x) -> dL/dvalues ([nnz, b, b]) for one SDDMM route."""
+    m, k, b = spec.m, spec.k, spec.block_size
+    mb, kb = m // b, k // b
+    rows = np.asarray(operand.row_idx, np.int32)
+    cols = np.asarray(operand.col_idx, np.int32)
+    if route == "sddmm_xla":
+        return _ssp.make_sddmm(rows, cols, (mb, kb), b)
+    if route == "sddmm_dense":
+        rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
+
+        def run(dy, x):
+            rt = jnp.result_type(dy.dtype, x.dtype)
+            dw = jnp.matmul(dy.astype(rt), x.astype(rt).T)
+            blocked = dw.reshape(mb, b, kb, b).transpose(0, 2, 1, 3)
+            return blocked[rows_j, cols_j]
+        return run
+    if route == "sddmm_grouped":
+        from repro.kernels.sddmm import ops as sddmm_ops
+        t = sddmm_ops.sddmm_tile_size(m, k, b)
+        meta = _sddmm_meta_for(operand, t)
+        interpret = ctx.interpret
+        return lambda dy, x: sddmm_ops.grouped_sddmm(meta, dy, x,
+                                                     interpret=interpret)
+    raise ValueError(f"unknown sddmm route {route!r}")
+
+
+def _grad_verdict(est, forced, *, measure_fns=None) -> dict:
+    """One backward product's verdict: analytic ranking, optionally
+    overturned by wall-clock measurement of the runnable candidates.
+    A measured verdict publishes ONLY the wall-clocked entries --
+    analytic model seconds and host timings are not comparable units,
+    and a mixed dict labeled 'measured' would report bogus crossovers
+    (the same rule PR 4's ``tp_source`` enforces for the TP race)."""
+    source = "forced" if forced else "analytic"
+    pick_from = est
+    if measure_fns:
+        pick_from = est = {r: dispatch.measure_callable(fn, *args)
+                           for r, (fn, args) in measure_fns.items()}
+        source = "measured"
+    return {"route": min(pick_from, key=pick_from.get),
+            "source": source,
+            "est_seconds": {r: float(s) for r, s in est.items()}}
+
+
+def _grad_decide(spec: OpSpec, ctx: PlanContext,
+                 operand: BlockSparseMatrix, x,
+                 disk_grad: Optional[dict]) -> dict:
+    """Backward route verdicts (dx = transposed SpMM, dvalues = SDDMM):
+    disk replay when the forward record carried them, else the analytic
+    race, wall-clocked when ``ctx.measure`` and the inputs are concrete
+    (the dy probe is shape data only -- zeros of the output shape)."""
+    if disk_grad is not None and \
+            disk_grad.get("dx", {}).get("route") in dispatch.ROUTES and \
+            disk_grad.get("dvalues", {}).get("route") in dispatch.SDDMM_ROUTES:
+        return dict(disk_grad, from_disk=True)
+    bwd_ctx = dataclasses.replace(_selection_ctx(spec, ctx),
+                                  differentiable=False, mode="auto")
+    m, k, n, b = spec.m, spec.k, spec.n, spec.block_size
+    d, dt = spec.density, spec.dtype
+    dx_forced = ctx.grad_mode != "auto"
+    dx_cands = ((ctx.grad_mode,) if dx_forced
+                else dispatch._candidates("static", bwd_ctx))
+    dv_forced = ctx.sddmm_mode != "auto"
+    dv_cands = ((ctx.sddmm_mode,) if dv_forced
+                else dispatch.sddmm_candidates(bwd_ctx))
+    # dx is the transposed problem: [k, m] @ [m, n]
+    dx_est = {r: dispatch._estimate(r, k, m, n, b, d, dt)
+              for r in dx_cands}
+    dv_est = {r: dispatch._estimate(r, m, k, n, b, d, dt)
+              for r in dv_cands}
+    dx_meas = dv_meas = None
+    cache_lib.bump("decisions")
+    if ctx.measure and x is not None and dispatch._is_concrete(
+            x, *jax.tree_util.tree_leaves(operand)):
+        dy = jnp.zeros((m, n), jnp.result_type(
+            jnp.dtype(dt), jnp.asarray(x).dtype))
+        v = jnp.asarray(operand.values)
+        dx_run = [r for r in dx_cands if dispatch._executable(r, bwd_ctx)]
+        dv_run = [r for r in dv_cands if dispatch._executable(r, bwd_ctx)]
+        if dx_run:
+            dx_meas = {r: (_dx_closure(r, spec, ctx, operand), (v, dy))
+                       for r in dx_run}
+        if dv_run:
+            dv_meas = {r: (_dv_closure(r, spec, ctx, operand),
+                           (dy, jnp.asarray(x)))
+                       for r in dv_run}
+        if dx_meas or dv_meas:
+            cache_lib.bump("measurements")
+    return {"dx": _grad_verdict(dx_est, dx_forced, measure_fns=dx_meas),
+            "dvalues": _grad_verdict(dv_est, dv_forced,
+                                     measure_fns=dv_meas),
+            "from_disk": False}
+
+
+def _planned_vjp(execute, dx_fn, dv_fn):
+    """The plan-level custom_vjp for static plans: forward runs the
+    planned route (Pallas included); backward runs the two sibling
+    plans.  Built once at plan time, so the wrapped callable is a
+    stable jit/vmap-safe identity."""
+    @jax.custom_vjp
+    def run(v, x):
+        return execute(v, x)
+
+    def fwd(v, x):
+        return run(v, x), (v, x)
+
+    def bwd(res, dy):
+        v, x = res
+        dv = dv_fn(dy, x)
+        dx = dx_fn(v, dy)
+        return (dv.astype(jnp.asarray(v).dtype), dx.astype(x.dtype))
+
+    run.defvjp(fwd, bwd)
+    return run
+
+
+def _dynamic_planned_vjp(execute, spec: OpSpec):
+    """Plan-level custom_vjp for dynamic-kind plans (runtime pattern):
+    backward uses the runtime-index transposed-gather/scatter pair --
+    the same products ``_dspmm``'s own vjp runs -- so the Pallas
+    dynamic forwards (dsmm slot walk, grouped tile pack) become
+    trainable.  Integer index/count leaves get no cotangent."""
+    m, k, b = spec.m, spec.k, spec.block_size
+    mb, kb = m // b, k // b
+
+    @jax.custom_vjp
+    def run(values, row_idx, col_idx, nnz, x):
+        op = DynamicOperand(values, row_idx, col_idx, nnz, (m, k), b)
+        return execute(op, x)
+
+    def fwd(values, row_idx, col_idx, nnz, x):
+        return run(values, row_idx, col_idx, nnz, x), \
+            (values, row_idx, col_idx, x)
+
+    def bwd(res, dy):
+        values, row_idx, col_idx, x = res
+        n = x.shape[-1]
+        dyb = dy.reshape(mb, b, n)
+        xb = x.reshape(kb, b, n)
+        dyg = jnp.take(dyb, row_idx, axis=0)
+        xg = jnp.take(xb, col_idx, axis=0)
+        dvalues = jnp.einsum("zan,zbn->zab", dyg, xg).astype(values.dtype)
+        partial = jnp.einsum("zab,zan->zbn", values, dyg)
+        dx = jax.ops.segment_sum(partial, col_idx, num_segments=kb)
+        return (dvalues, None, None, None,
+                dx.reshape(kb * b, n).astype(x.dtype))
+
+    run.defvjp(fwd, bwd)
+    return lambda op, x: run(op.values, op.row_idx, op.col_idx, op.nnz, x)
+
+
+def _dense_planned_vjp(execute, op: str):
+    """custom_vjp for the dense_pallas forward kernel (no native VJP):
+    backward is the two dense products via jnp.matmul."""
+    @jax.custom_vjp
+    def run(w, x):
+        return execute(w, x)
+
+    def fwd(w, x):
+        return run(w, x), (w, x)
+
+    if op == "matmul":     # execute(w, x2) = x2 @ w
+        def bwd(res, dy):
+            w, x2 = res
+            return ((x2.T @ dy).astype(w.dtype),
+                    (dy @ w.T).astype(x2.dtype))
+    else:                  # spmm form: execute(w, x) = w @ x
+        def bwd(res, dy):
+            w, x = res
+            return ((dy @ x.T).astype(w.dtype),
+                    (w.T @ dy).astype(x.dtype))
+
+    run.defvjp(fwd, bwd)
+    return run
+
+
+def _no_vjp_error(execute, route: str, workaround: str):
+    """Forward-only plans (Pallas route, no planned backward): fail the
+    backward *trace* with an actionable error instead of the opaque
+    Pallas internal failure / silent wrong-gradient path."""
+    @jax.custom_vjp
+    def run(v, x):
+        return execute(v, x)
+
+    def fwd(v, x):
+        return run(v, x), None
+
+    def bwd(res, dy):
+        raise ValueError(
+            f"plan route {route!r} has no registered VJP (the Pallas "
+            f"kernel is forward-only and this plan was built without a "
+            f"planned backward); {workaround}")
+
+    run.defvjp(fwd, bwd)
+    return run
+
+
+_PALLAS_FWD_ONLY = ("dense_pallas", "static_pallas", "dynamic_pallas",
+                    "dynamic_grouped")
+
+
+def _wrap_grad(spec: OpSpec, route: str, ctx: PlanContext,
+               operand: Optional[Operand], x, execute,
+               disk_grad: Optional[dict]):
+    """-> (execute', grad_artifacts).  Attaches the plan-level backward
+    (or the clear no-VJP error) to an executable plan's closure."""
+    if route in TP_ROUTES:
+        # gspmd / shard_map lowerings are jnp + psum: native autodiff
+        # already runs sharded backward products
+        return execute, ({"mode": "native"} if ctx.differentiable
+                         else None)
+    if spec.op == "spmm" and spec.kind == "static" \
+            and isinstance(operand, BlockSparseMatrix):
+        if _grad_covered(spec, ctx):
+            grad = _grad_decide(spec, ctx, operand, x, disk_grad)
+            dx_fn = _dx_closure(grad["dx"]["route"], spec, ctx, operand)
+            dv_fn = _dv_closure(grad["dvalues"]["route"], spec, ctx,
+                                operand)
+            return (_planned_vjp(execute, dx_fn, dv_fn),
+                    dict(grad, mode="planned"))
+        if route in _PALLAS_FWD_ONLY:
+            return _no_vjp_error(
+                execute, route,
+                "re-plan with PlanContext(differentiable=True) for the "
+                "planned backward, or force an XLA route (e.g. "
+                "mode='static_xla')"), {"mode": "unavailable"}
+        return execute, None
+    if spec.op == "spmm" and spec.kind == "dynamic":
+        if ctx.differentiable:
+            if route == "dynamic_xla":
+                # _dspmm carries its own runtime-index custom_vjp
+                return execute, {"mode": "native"}
+            wrapped = _dynamic_planned_vjp(execute, spec)
+            return wrapped, {
+                "mode": "planned",
+                "dx": {"route": "dynamic_xla", "source": "forced"},
+                "dvalues": {"route": "sddmm_xla", "source": "forced"},
+                "from_disk": False}
+        if route in _PALLAS_FWD_ONLY:
+            return _no_vjp_error(
+                execute, route,
+                "re-plan with PlanContext(differentiable=True) for the "
+                "planned backward, or force an XLA route (e.g. "
+                "mode='dynamic_xla')"), {"mode": "unavailable"}
+        return execute, None
+    # dense kind (spmm / matmul / batched_matmul ops)
+    if route == "dense_pallas":
+        if ctx.differentiable and spec.op in ("spmm", "matmul"):
+            return (_dense_planned_vjp(execute, spec.op),
+                    {"mode": "planned",
+                     "dx": {"route": "dense_xla", "source": "forced"},
+                     "dvalues": {"route": "dense_xla",
+                                 "source": "forced"},
+                     "from_disk": False})
+        return _no_vjp_error(
+            execute, route,
+            "force the XLA route (mode='dense_xla') for differentiable "
+            "callers"), {"mode": "unavailable"}
+    return execute, ({"mode": "native"} if ctx.differentiable else None)
+
+
 def _build_executor(spec: OpSpec, route: str, ctx: PlanContext,
                     operand: Optional[Operand], key: str,
                     disk_capacity: Optional[dict] = None):
@@ -868,11 +1291,16 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
             cache_lib.bump("plan_hits")
             return hit
 
-    route, est, source, from_disk, disk_cap, tp_source = _decide(
-        spec, ctx, operand, x)
+    route, est, source, from_disk, disk_cap, tp_source, disk_grad = \
+        _decide(spec, ctx, operand, x)
     key_str = cache_lib.key_string(fp)
     execute, artifacts = _build_executor(spec, route, ctx, operand,
                                          key_str, disk_cap)
+    if execute is not None:
+        execute, grad_art = _wrap_grad(spec, route, ctx, operand, x,
+                                       execute, disk_grad)
+        if grad_art is not None:
+            artifacts["grad"] = grad_art
     tp_info = _tp_decision(ctx, route, est, source, tp_source)
     if tp_info is not None:
         artifacts["tp"] = tp_info
@@ -900,6 +1328,14 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
             rec["capacity"] = {k2: v for k2, v in
                                artifacts["capacity"].items()
                                if k2 != "escalated"}
+        grad_art = artifacts.get("grad")
+        if grad_art and grad_art.get("mode") == "planned" \
+                and "dx" in grad_art and _grad_covered(spec, ctx):
+            # the backward verdicts ride in the forward record (one
+            # entry per plan fingerprint): a restarted trainer replays
+            # fwd route + dx route + dvalues route from one disk hit
+            rec["grad"] = {side: dict(grad_art[side])
+                           for side in ("dx", "dvalues")}
         cache_lib.store_decision(ctx.resolved_cache_dir(), key_str, rec)
 
     if ctx.cache:

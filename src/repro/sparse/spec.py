@@ -40,6 +40,12 @@ TP_ROUTES = ("static_tp", "static_tp_shardmap")
 PLAN_ROUTES = dispatch.ROUTES + TP_ROUTES
 PLAN_MODES = dispatch.MODES + TP_ROUTES
 
+# backward (plan-level custom_vjp) route policies: dL/dx is an SpMM on
+# the transposed pattern (dispatch route vocabulary), dL/dvalues is a
+# block SDDMM (its own vocabulary, see dispatch.SDDMM_ROUTES)
+GRAD_DX_MODES = ("auto",) + dispatch.ROUTES
+GRAD_SDDMM_MODES = ("auto",) + dispatch.SDDMM_ROUTES
+
 
 @dataclasses.dataclass(frozen=True)
 class OpSpec:
@@ -246,6 +252,17 @@ class PlanContext:
     telemetry           record per-call pack overflow into the plan's
                         ``CapacityStats`` (a host callback per call --
                         on by default; turn off for benchmark loops).
+
+    Backward policy (the planned ``custom_vjp`` knobs -- used when
+    ``differentiable`` is on and the plan has a concrete pattern):
+
+    grad_mode   route policy for the dL/dx sibling product (an SpMM on
+                the transposed pattern): "auto" races the dispatch
+                candidates on the transposed problem; a route id forces
+                it.  Part of the plan fingerprint.
+    sddmm_mode  route policy for the dL/dvalues sibling product (block
+                SDDMM): "auto" races ``dispatch.SDDMM_ROUTES``; a route
+                id forces it.  Part of the plan fingerprint.
     """
 
     mode: str = "auto"
@@ -265,11 +282,19 @@ class PlanContext:
     capacity_policy: str = "planned"
     overflow_threshold: float = 0.25
     telemetry: bool = True
+    grad_mode: str = "auto"
+    sddmm_mode: str = "auto"
 
     def __post_init__(self):
         if self.mode not in PLAN_MODES:
             raise ValueError(f"unknown plan mode {self.mode!r}; expected "
                              f"one of {PLAN_MODES}")
+        if self.grad_mode not in GRAD_DX_MODES:
+            raise ValueError(f"unknown grad_mode {self.grad_mode!r}; "
+                             f"expected one of {GRAD_DX_MODES}")
+        if self.sddmm_mode not in GRAD_SDDMM_MODES:
+            raise ValueError(f"unknown sddmm_mode {self.sddmm_mode!r}; "
+                             f"expected one of {GRAD_SDDMM_MODES}")
         if self.capacity_policy not in CAPACITY_POLICIES:
             raise ValueError(
                 f"unknown capacity_policy {self.capacity_policy!r}; "

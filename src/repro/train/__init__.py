@@ -1,1 +1,2 @@
-from repro.train.step import TrainState, make_train_step, init_train_state  # noqa: F401
+from repro.train.step import (TrainState, init_train_state,  # noqa: F401
+                              make_train_step, microbatch_grads)

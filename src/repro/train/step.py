@@ -45,6 +45,53 @@ def init_train_state(lm: LM, key, *, hp: TrainHParams = TrainHParams()
                       ef_init(params) if hp.grad_compress else None)
 
 
+def microbatch_grads(grad_fn, params, batch, accum: int):
+    """Gradient accumulation over ``accum`` microbatches (lax.scan).
+
+    ``grad_fn(params, microbatch) -> ((loss, metrics), grads)`` is a
+    ``jax.value_and_grad(..., has_aux=True)`` of any loss -- including
+    losses through ``repro.sparse`` plans: the plan-level ``custom_vjp``
+    runs its planned backward products once per scan iteration, exactly
+    like the forward route.  The batch is split on axis 0; fp32 grads
+    accumulate sequentially (peak activation memory drops to 1/accum);
+    loss/metrics/grads come back microbatch-averaged.
+
+    Public so tests and custom training loops share the exact scan the
+    production ``make_train_step`` compiles.
+    """
+    if accum == 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def resplit(x):
+        b = x.shape[0]
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    micro = jax.tree.map(resplit, batch)
+    first = jax.tree.map(lambda x: x[0], micro)
+    # metrics structure is loss-defined: derive the zero carry from the
+    # abstract output instead of hard-coding the LM metric names
+    m_shape = jax.eval_shape(lambda p, mb: grad_fn(p, mb)[0][1],
+                             params, first)
+    zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
+
+    def acc_fn(carry, mb):
+        tot_loss, tot_metrics, acc = carry
+        (loss, metrics), grads = grad_fn(params, mb)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        tot_metrics = jax.tree.map(jnp.add, tot_metrics, metrics)
+        return (tot_loss + loss, tot_metrics, acc), None
+
+    zero_g = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, metrics, grads), _ = jax.lax.scan(
+        acc_fn, (jnp.zeros((), jnp.float32), zero_m, zero_g), micro)
+    inv = 1.0 / accum
+    return (loss * inv, jax.tree.map(lambda m: m * inv, metrics),
+            jax.tree.map(lambda g: g * inv, grads))
+
+
 def make_train_step(lm: LM, hp: TrainHParams = TrainHParams()):
     def loss_fn(params, batch):
         loss, metrics = lm.loss(params, batch)
@@ -53,35 +100,7 @@ def make_train_step(lm: LM, hp: TrainHParams = TrainHParams()):
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def compute_grads(params, batch):
-        if hp.accum == 1:
-            (loss, metrics), grads = grad_fn(params, batch)
-            return loss, metrics, grads
-        # split the per-step batch into `accum` microbatches on axis 0 and
-        # accumulate fp32 grads sequentially (memory <- 1/accum activations)
-        def resplit(x):
-            b = x.shape[0]
-            return x.reshape(hp.accum, b // hp.accum, *x.shape[1:])
-
-        micro = jax.tree.map(resplit, batch)
-
-        def acc_fn(carry, mb):
-            tot_loss, tot_metrics, acc = carry
-            (loss, metrics), grads = grad_fn(params, mb)
-            acc = jax.tree.map(
-                lambda a, g: a + g.astype(jnp.float32), acc, grads)
-            tot_metrics = jax.tree.map(jnp.add, tot_metrics, metrics)
-            return (tot_loss + loss, tot_metrics, acc), None
-
-        zero_g = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        zero_m = {"aux_loss": 0., "z_loss": 0., "dropped_frac": 0.,
-                  "xent": 0.}
-        zero_m = jax.tree.map(jnp.float32, zero_m)
-        (loss, metrics, grads), _ = jax.lax.scan(
-            acc_fn, (jnp.zeros((), jnp.float32), zero_m, zero_g), micro)
-        inv = 1.0 / hp.accum
-        return (loss * inv, jax.tree.map(lambda m: m * inv, metrics),
-                jax.tree.map(lambda g: g * inv, grads))
+        return microbatch_grads(grad_fn, params, batch, hp.accum)
 
     def train_step(state: TrainState, batch):
         loss, metrics, grads = compute_grads(state.params, batch)

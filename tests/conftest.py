@@ -1,7 +1,43 @@
 import os
 import sys
 
+import numpy as np
+
 # NOTE: do NOT set XLA_FLAGS device-count here -- smoke tests and benches
 # must see the 1 real CPU device (the 512-device override is exclusively
 # for launch/dryrun.py, per the brief).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ---------------------------------------------------------------------------
+# Per-dtype tolerance helpers for the gradient-parity conformance sweep
+# (tests/test_grad_parity.py) and any other numerics-vs-oracle check.
+#
+# The budgets are relative to the oracle's max magnitude (block-sparse
+# products accumulate over nnz blocks, so per-element relative checks
+# explode on near-zero entries): fp32 covers reassociation noise only;
+# bf16 (8-bit mantissa) and fp16 (10-bit mantissa) budgets cover one
+# round-trip through the forward product + one backward product.
+# ---------------------------------------------------------------------------
+
+GRAD_TOLS = {
+    "float32": 1e-4,
+    "bfloat16": 6e-2,
+    "float16": 2e-2,
+}
+
+
+def grad_tol(dtype) -> float:
+    import jax.numpy as jnp
+    return GRAD_TOLS[jnp.dtype(dtype).name]
+
+
+def assert_close_for_dtype(got, want, dtype, label: str = ""):
+    """Max-norm relative comparison at the dtype's conformance budget."""
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    scale = max(float(np.abs(want).max()), 1e-6)
+    err = float(np.abs(got - want).max()) / scale
+    tol = grad_tol(dtype)
+    assert err <= tol, (f"{label or 'array'} diverges: rel-max err "
+                        f"{err:.2e} > {tol:.0e} budget for {dtype}")

@@ -55,12 +55,21 @@ def test_smoke_train_step(name):
 
 @pytest.mark.parametrize("name", ARCHS)
 def test_smoke_decode_consistency(name):
-    """prefill(S-1) + decode(1) == forward(S) at the last position."""
-    if name == "deepseek_v2_lite_16b":
-        pytest.xfail("decode diverges from forward (rel~0.15 vs 0.08 "
-                     "budget) -- pre-existing at seed; MLA decode path "
-                     "under investigation, see ROADMAP open items")
+    """prefill(S-1) + decode(1) == forward(S) at the last position.
+
+    deepseek_v2_lite_16b runs the check in fp32.  Bisection (PR 5) of
+    the old rel~0.15 bf16 divergence: MLA decode scores through the
+    absorbed-latent formulation in fp32 while forward expands
+    k_nope/v through ``kv_b`` in bf16 -- a ~0.5% per-layer numeric
+    difference (both paths are mathematically identical), which flips a
+    top-k expert in the first MoE router and swaps a whole expert FFN.
+    Not a decode bug: in fp32 decode matches forward to ~1e-6, and
+    ``test_mla_decode_absorbed_parity`` guards the layer-level bf16
+    budget where no router discontinuity can amplify it.
+    """
     cfg = configs.smoke(name)
+    if name == "deepseek_v2_lite_16b":
+        cfg = dataclasses.replace(cfg, dtype="float32")
     if cfg.moe is not None:   # avoid capacity-drop divergence in the check
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
@@ -102,6 +111,34 @@ def test_param_count_positive(name):
     if cfg.name in expected:
         lo, hi = expected[cfg.name]
         assert lo < n < hi, f"{cfg.name}: {n/1e9:.2f}B params out of range"
+
+
+def test_mla_decode_absorbed_parity():
+    """Targeted regression for the deepseek decode finding: the MLA
+    absorbed-latent decode (fp32 score math over the latent cache) must
+    stay within a tight budget of the expanded bf16 train path at the
+    *layer* level -- the full-model bf16 divergence was this numeric
+    difference amplified by an MoE router top-k flip, so the layer
+    budget is the quantity that guards the decode math itself."""
+    from repro.models import attention as attn
+    cfg = configs.smoke("deepseek_v2_lite_16b")
+    params = attn.mla_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 33
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.bfloat16)
+    pos = jnp.tile(jnp.arange(S)[None, :], (B, 1))
+    full = attn.mla_train(params, cfg, x, positions=pos)
+    _, cache = attn.mla_prefill(params, cfg, x[:, :S - 1],
+                                positions=pos[:, :S - 1], max_len=S + 3)
+    p = jnp.full((B,), S - 1, jnp.int32)
+    y_dec, _ = attn.mla_decode(params, cfg, x[:, S - 1:S], cache,
+                               positions=p)
+    ref = np.asarray(full[:, -1], np.float32)
+    got = np.asarray(y_dec[:, 0], np.float32)
+    rel = np.abs(got - ref).max() / (np.abs(ref).max() + 1e-9)
+    # observed ~0.005 (bf16-expanded vs fp32-absorbed reassociation);
+    # 0.02 budget leaves room for seed jitter, not for a real math bug
+    assert rel < 0.02, f"MLA absorbed decode diverges at layer: {rel}"
 
 
 def test_retained_decode_runs():
