@@ -66,10 +66,22 @@ def _tp_ratios(recs):
             {"ratio": r["est_tp_speedup"]} for r in recs}
 
 
+def _train_grad_ratios(recs):
+    # the route triple is one gate unit: a flip of ANY of the three
+    # (fwd / dL-dx / dL-dW) verdicts at the same grid point is a
+    # crossover regression
+    return {_key(r, ("m", "b", "density", "n")):
+            {"ratio": r["train_speedup_vs_dense"],
+             "route": f"{r['fwd_route']}+{r['dx_route']}"
+                      f"+{r['dv_route']}"}
+            for r in recs}
+
+
 EXTRACTORS = {
     "dispatch": _dispatch_ratios,
     "grouped_capacity": _capacity_ratios,
     "tp_crossover": _tp_ratios,
+    "train_grad": _train_grad_ratios,
 }
 
 # runner-dependent fields stripped from baselines on --update, so a
@@ -82,6 +94,7 @@ STRIP_FIELDS = {
     "tp_crossover": ("measured_us", "tp_speedup_measured",
                      "tp_wins_measured", "chosen", "source",
                      "q_measured"),
+    "train_grad": (),      # all fields are deterministic model outputs
 }
 
 
