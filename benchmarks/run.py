@@ -51,6 +51,12 @@ CLAIMS = {
                   "ride the same pre-planned fast path as the forward, "
                   "so the fwd+bwd triple beats the dense triple at low "
                   "density and the win grows as density falls",
+    "pattern_evolution": "dynamic sparse training on static plans: a "
+                         "RigL topology update is an incremental "
+                         "MatmulPlan.evolve (host re-pack, verdicts "
+                         "reused, zero measurements) instead of a "
+                         "from-scratch re-plan, and the evolved plan "
+                         "keeps the static fwd+bwd win over dense",
 }
 
 
@@ -148,6 +154,23 @@ def _check(fig, recs):
             f"b={best['b']} d={best['density']:.4f}: "
             f"fwd={best['fwd_route']} dx={best['dx_route']} "
             f"dW={best['dv_route']})")
+    if fig == "pattern_evolution":
+        # the tentpole invariant: every in-threshold evolve chain runs
+        # zero route decisions / measurement events; evolve must be
+        # cheaper than a measured re-plan everywhere; and the evolved
+        # plan must still beat the dense training step at d<=1/16 b>=16
+        no_events = all(r["evolve_measurements"] == 0 for r in recs)
+        cheaper = all(r["replan_vs_evolve"] > 1.0 for r in recs)
+        wins = [r for r in recs if r["density"] <= 1 / 16
+                and r["b"] >= 16 and r["step_speedup_vs_dense"] > 1.0]
+        best = max(recs, key=lambda r: r["step_speedup_vs_dense"])
+        return no_events and cheaper and bool(wins), (
+            f"{sum(r['generations'] for r in recs)} evolves, "
+            f"{sum(r['evolve_measurements'] for r in recs)} measurement "
+            f"events; evolve beats measured re-plan on all "
+            f"{len(recs)} points; {len(wins)} evolved-plan wins at "
+            f"d<=1/16 b>=16 (best {best['step_speedup_vs_dense']}x at "
+            f"m={best['m']} b={best['b']} d={best['density']:.4f})")
     if fig == "tp_crossover":
         # deterministic side: analytic TP speedup grows with m per
         # (density, n) and crosses 1 somewhere on the grid; measured

@@ -30,6 +30,37 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def check_unique_blocks(row_idx, col_idx, grid: Tuple[int, int]) -> None:
+    """Reject duplicate ``(row, col)`` block coordinates in a static
+    pattern.  ``pack_values`` / ``to_dense`` scatter with ``.add``, so a
+    duplicate block would be silently *summed* -- a corrupted evolved
+    pattern (e.g. a drop/grow step that re-grows a live block) must fail
+    loudly here, not as wrong numerics three layers down."""
+    rows = np.asarray(row_idx, np.int64)
+    cols = np.asarray(col_idx, np.int64)
+    mb, kb = grid
+    if rows.size and (rows.min() < 0 or rows.max() >= mb
+                      or cols.min() < 0 or cols.max() >= kb):
+        raise ValueError(
+            f"block indices out of range for grid {grid}: rows in "
+            f"[{rows.min() if rows.size else 0}, "
+            f"{rows.max() if rows.size else 0}], cols in "
+            f"[{cols.min() if cols.size else 0}, "
+            f"{cols.max() if cols.size else 0}]")
+    lin = rows * kb + cols
+    uniq, counts = np.unique(lin, return_counts=True)
+    if uniq.size != lin.size:
+        dup = uniq[counts > 1][0]
+        raise ValueError(
+            f"duplicate block coordinates in static pattern: block "
+            f"(row={int(dup // kb)}, col={int(dup % kb)}) appears "
+            f"{int(counts.max())} times ({lin.size - uniq.size} "
+            f"duplicate entries total).  pack_values/to_dense would "
+            f"silently sum duplicate blocks; deduplicate the pattern "
+            f"(a drop/grow topology update must produce unique "
+            f"(row, col) pairs)")
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BlockSparseMatrix:
@@ -109,6 +140,7 @@ class BlockSparseMatrix:
         rows, cols = np.nonzero(keep_mask)  # row-major order guaranteed
         order = np.lexsort((cols, rows))
         rows, cols = rows[order], cols[order]
+        check_unique_blocks(rows, cols, (mb, kb))
         blocked = jnp.asarray(dense).reshape(mb, b, kb, b).transpose(0, 2, 1, 3)
         values = blocked[rows, cols]
         if static:
@@ -127,6 +159,7 @@ class BlockSparseMatrix:
         rows, cols = np.nonzero(np.asarray(mask, bool))
         order = np.lexsort((cols, rows))
         rows, cols = rows[order].astype(np.int32), cols[order].astype(np.int32)
+        check_unique_blocks(rows, cols, (mb, kb))
         nnz = len(rows)
         if init == "zeros":
             values = jnp.zeros((nnz, b, b), dtype)
@@ -168,6 +201,19 @@ class BlockSparseMatrix:
         mask = np.zeros((mb, kb), bool)
         mask[self.row_idx, self.col_idx] = True
         return mask
+
+    def validate_pattern(self) -> "BlockSparseMatrix":
+        """Check static-pattern invariants (unique in-range ``(row, col)``
+        pairs) and return self.  Deliberately NOT run per construction:
+        pytree unflatten re-builds this object on every traced call, so
+        the O(nnz log nnz) host check runs only at the explicit entry
+        points (static constructors, ``partitioner.plan_packing``,
+        ``MatmulPlan.evolve``)."""
+        if not self.is_static:
+            raise ValueError("validate_pattern() requires a static "
+                             "(host-indexed) pattern")
+        check_unique_blocks(self.row_idx, self.col_idx, self.grid)
+        return self
 
     def with_values(self, values: Array) -> "BlockSparseMatrix":
         return BlockSparseMatrix(values, self.row_idx, self.col_idx,

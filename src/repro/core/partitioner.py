@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bsr import BlockSparseMatrix
+from repro.core.bsr import BlockSparseMatrix, check_unique_blocks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +114,10 @@ def plan_packing(row_idx: np.ndarray, col_idx: np.ndarray,
 
     rows = np.asarray(row_idx)
     cols = np.asarray(col_idx)
+    # a duplicate block would be silently summed by pack_values' .add
+    # scatter -- every plan path funnels through here, so this is the
+    # backstop for patterns built from raw index arrays
+    check_unique_blocks(rows, cols, (-(-m // b), -(-k // b)))
     t_r, t_c = rows // rpb, cols // cpb
     lin = t_r * kt + t_c
     uniq = np.unique(lin)
@@ -358,9 +362,73 @@ def shard_blocks_by_k(bsr: BlockSparseMatrix, q: int,
                           bsr.values)
 
 
+@dataclasses.dataclass(frozen=True)
+class EvolvePlan:
+    """One-time host analysis of a pattern *evolution* (old -> new).
+
+    Pattern half of a RigL-style topology update on a static plan
+    (plan-first contract, same split as ``plan_packing``/``pack_values``):
+    for each block of the new pattern, the source slot in the old values
+    stack, or -1 for a freshly grown block.  ``apply_evolution`` is the
+    per-call value half -- a device gather where carried blocks keep
+    their values exactly, grown blocks start at zero, and dropped blocks
+    simply have no destination (RigL semantics, Evci et al. 2019 §3).
+    """
+
+    src_slot: np.ndarray      # [nnz_new] int64; -1 marks a grown block
+    carried: int              # blocks present in both patterns
+    dropped: int              # old blocks absent from the new pattern
+    grown: int                # new blocks absent from the old pattern
+
+
+def plan_evolution(old_rows: np.ndarray, old_cols: np.ndarray,
+                   new_rows: np.ndarray, new_cols: np.ndarray,
+                   grid: Tuple[int, int]) -> EvolvePlan:
+    """Map each new-pattern block to its old values slot (host, once per
+    topology step).  Neither pattern needs to be sorted; both must be
+    duplicate-free (``check_unique_blocks``)."""
+    mb, kb = grid
+    check_unique_blocks(old_rows, old_cols, grid)
+    check_unique_blocks(new_rows, new_cols, grid)
+    old_lin = np.asarray(old_rows, np.int64) * kb + np.asarray(old_cols,
+                                                               np.int64)
+    new_lin = np.asarray(new_rows, np.int64) * kb + np.asarray(new_cols,
+                                                               np.int64)
+    if old_lin.size:
+        order = np.argsort(old_lin)
+        pos = np.searchsorted(old_lin[order], new_lin)
+        pos_c = np.minimum(pos, old_lin.size - 1)
+        found = old_lin[order][pos_c] == new_lin
+        src = np.where(found, order[pos_c], -1).astype(np.int64)
+    else:
+        src = np.full(new_lin.size, -1, np.int64)
+    carried = int((src >= 0).sum())
+    return EvolvePlan(src, carried,
+                      int(old_lin.size) - carried,
+                      int(new_lin.size) - carried)
+
+
+def apply_evolution(plan: EvolvePlan, old_values) -> jax.Array:
+    """Value half of a topology update: carry ``[nnz_old, b, b]`` blocks
+    into the new pattern's ``[nnz_new, b, b]`` stack (grown blocks
+    zero-initialized).  Jit-compatible -- the map is a host constant."""
+    vals = jnp.asarray(old_values)
+    nnz_new = int(plan.src_slot.shape[0])
+    if vals.shape[0] == 0:
+        return jnp.zeros((nnz_new,) + vals.shape[1:], vals.dtype)
+    src = jnp.asarray(plan.src_slot)
+    gathered = vals[jnp.clip(src, 0, vals.shape[0] - 1)]
+    keep = (src >= 0).reshape((-1,) + (1,) * (vals.ndim - 1))
+    return jnp.where(keep, gathered, jnp.zeros_like(gathered))
+
+
 def balance_report(counts: np.ndarray) -> dict:
     """Load-balance diagnostics (used by tests + benchmarks)."""
     counts = np.asarray(counts)
+    if counts.size == 0:
+        # degenerate pattern (no owners): a zeroed report, not a crash
+        return {"max": 0, "min": 0, "mean": 0.0, "imbalance": 0.0,
+                "padding_waste": 0.0}
     mx, mn, mean = counts.max(), counts.min(), counts.mean()
     return {
         "max": int(mx), "min": int(mn), "mean": float(mean),

@@ -39,25 +39,38 @@ def rigl_update(w: jax.Array, grad: jax.Array, mask: jax.Array, *,
     Drop the ``fraction`` lowest-|W| active blocks, regrow the same number
     of inactive blocks with the largest |grad| -- total active count (and
     therefore ``d_max`` capacity) is preserved, so the dynamic-sparse
-    compiled program never changes shape.
+    compiled program never changes shape.  ``rng`` breaks ties among
+    equal grow scores (RigL: early in training many inactive blocks have
+    exactly zero gradient -- plain argsort would bias regrowth toward
+    low block indices every step).
     """
     b = block_size
     w_score = _block_scores(w, b)
     g_score = _block_scores(grad, b)
     active = mask.astype(bool)
+    total = active.size
     n_active = jnp.sum(active.astype(jnp.int32))
-    n_move = jnp.maximum(
-        (n_active.astype(jnp.float32) * fraction).astype(jnp.int32), 0)
+    n_inactive = jnp.int32(total) - n_active
+    # clamp to the movable pool: at density ~1 (or fraction ~1) there
+    # are fewer inactive blocks than drop candidates -- an unclamped
+    # n_move would drop more blocks than it can grow, silently shrinking
+    # the active count and breaking the d_max capacity invariant
+    n_move = (n_active.astype(jnp.float32) * fraction).astype(jnp.int32)
+    n_move = jnp.clip(n_move, 0, jnp.minimum(n_active, n_inactive))
 
     flat_active = active.reshape(-1)
-    # drop: lowest |W| among active
+    # drop: lowest |W| among active (deterministic -- magnitudes of live
+    # weights are continuous, ties carry no information)
     drop_key = jnp.where(flat_active, w_score.reshape(-1), jnp.inf)
     drop_order = jnp.argsort(drop_key)
     drop_rank = jnp.argsort(drop_order)           # rank of each block
     dropped = flat_active & (drop_rank < n_move)
-    # grow: highest |grad| among inactive
+    # grow: highest |grad| among inactive, ties broken by rng -- sort a
+    # random permutation of the keys (stable argsort keeps equal keys in
+    # shuffled order) and map ranks back through the permutation
     grow_key = jnp.where(~flat_active, g_score.reshape(-1), -jnp.inf)
-    grow_order = jnp.argsort(-grow_key)
+    shuffle = jax.random.permutation(rng, total)
+    grow_order = shuffle[jnp.argsort(-grow_key[shuffle])]
     grow_rank = jnp.argsort(grow_order)
     grown = (~flat_active) & (grow_rank < n_move)
 

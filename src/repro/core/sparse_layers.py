@@ -108,6 +108,44 @@ class SparseLinear:
             y = y + params["bias"]
         return y
 
+    def evolve(self, new_pattern: np.ndarray, params: Optional[dict] = None):
+        """Topology update (RigL drop/grow): returns ``(layer, params)``
+        for ``new_pattern`` ``[out/b, in/b]``.
+
+        Values of carried blocks are copied into their new slot order,
+        grown blocks start at zero (RigL's convention), and every cached
+        plan built on the old pattern is ``sparse.evolve``-d onto the new
+        one -- so the next ``apply`` is a plan-cache hit with zero route
+        decisions (unless the pattern drifted past the context's
+        ``evolve_drift`` guardrail, which re-races).
+        """
+        from repro import sparse as sparse_api
+        from repro.core import partitioner
+        new_pattern = np.asarray(new_pattern, bool)
+        layer = dataclasses.replace(self, pattern=new_pattern)
+        if params is not None:
+            old_r, old_c = self._indices()
+            new_r, new_c = layer._indices()
+            eplan = partitioner.plan_evolution(
+                old_r, old_c, new_r, new_c, new_pattern.shape)
+            new_params = dict(params)
+            new_params["values"] = partitioner.apply_evolution(
+                eplan, params["values"])
+            params = new_params
+        # migrate every cached plan (any n) onto the new pattern
+        dummy = jnp.zeros((self.nnz_blocks, self.block_size,
+                           self.block_size), self.dtype)
+        old_bsr = BlockSparseMatrix(
+            dummy, *self._indices(),
+            (self.out_features, self.in_features), self.block_size)
+        new_bsr = BlockSparseMatrix(
+            jnp.zeros((layer.nnz_blocks, self.block_size,
+                       self.block_size), self.dtype),
+            *layer._indices(),
+            (self.out_features, self.in_features), self.block_size)
+        sparse_api.evolve_plans(old_bsr, new_bsr)
+        return layer, params
+
     @classmethod
     def random_pattern(cls, key_unused, in_features, out_features,
                        block_size, density, *, seed=0, **kw):

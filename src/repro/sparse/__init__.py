@@ -30,6 +30,8 @@ from repro.sparse.plan import (  # noqa: F401
     cache_stats,
     capacity_report,
     configure,
+    evolve,
+    evolve_plans,
     explain,
     format_plan,
     matmul,

@@ -45,7 +45,12 @@ import jax
 # (grad_mode / sddmm_mode) -- a v3 record carries no backward verdicts,
 # so replaying one would silently re-race (or worse, skip) the backward
 # decisions a restart is entitled to; v3 files are invalidated wholesale
-SCHEMA_VERSION = 4
+# v5: decision records grew an "evolution" lineage section (parent/root
+# keys, generation, observed drift vs the reference profile, re-race
+# verdict) written by MatmulPlan.evolve -- an evolved pattern's record
+# documents that its route verdicts were *inherited*, not raced, so the
+# drift guardrail survives a restart; v4 files are invalidated wholesale
+SCHEMA_VERSION = 5
 
 _lock = threading.RLock()
 _configured_dir: Optional[str] = None

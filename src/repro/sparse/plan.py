@@ -58,6 +58,12 @@ _plan_lock = threading.Lock()
 _capacity_registry: Dict[str, CapacityStats] = {}
 _capacity_lock = threading.Lock()
 
+# process-wide evolution telemetry (MatmulPlan.evolve): how many
+# topology updates ran, how many tripped the drift guardrail, and how
+# many re-raced the routes -- surfaced in plan_report()["totals"]
+_evolution_totals: Dict[str, int] = {"evolves": 0, "reraces": 0,
+                                     "drift_trips": 0}
+
 
 def reset(*, counters: bool = True):
     """Forget every in-memory plan, decision, capacity stat, and
@@ -68,6 +74,8 @@ def reset(*, counters: bool = True):
         _shard_meta_cache.clear()
         _transpose_cache.clear()
         _sddmm_meta_cache.clear()
+        for k in _evolution_totals:
+            _evolution_totals[k] = 0
     with _capacity_lock:
         _capacity_registry.clear()
     cache_lib.reset(counters=counters)
@@ -158,16 +166,23 @@ def plan_report() -> dict:
     Pallas plan; differentiating raises)."""
     with _plan_lock:
         plans = list(_plan_cache.values())
+        evo_totals = dict(_evolution_totals)
     per = {}
     for p in plans:
         grad = p.artifacts.get("grad")
-        per[p.key] = {
+        ev = p.artifacts.get("evolution")
+        # an evolve chain shares one pattern-free disk key; suffix the
+        # generation so live generations do not shadow each other here
+        rkey = p.key if not ev else f"{p.key}#gen{ev['generation']}"
+        per[rkey] = {
             "route": p.route, "source": p.source,
             "from_disk": p.from_disk, "op": p.spec.op,
             "kind": p.spec.kind, "grad": grad,
+            "evolution": p.artifacts.get("evolution"),
         }
     planned = [r for r in per.values()
                if (r["grad"] or {}).get("mode") == "planned"]
+    evolved = [r for r in per.values() if r["evolution"]]
     return {
         "per_plan": per,
         "totals": {
@@ -179,6 +194,11 @@ def plan_report() -> dict:
                 and r["grad"]["dx"].get("source") == "measured"),
             "grad_from_disk": sum(1 for r in planned
                                   if r["grad"].get("from_disk")),
+            "evolution": dict(evo_totals,
+                              evolved_plans=len(evolved),
+                              max_generation=max(
+                                  (r["evolution"]["generation"]
+                                   for r in evolved), default=0)),
         },
     }
 
@@ -288,7 +308,12 @@ class MatmulPlan:
             "cache_key": self.key,
             "tp": self.artifacts.get("tp"),
             "grad": self.artifacts.get("grad"),
-            "plan": dict(self.artifacts, executable=self.executable),
+            "evolution": self.artifacts.get("evolution"),
+            # underscore artifacts are host-side working state (pattern
+            # arrays, carry maps), not report material
+            "plan": dict({k2: v for k2, v in self.artifacts.items()
+                          if not k2.startswith("_")},
+                         executable=self.executable),
             "capacity": (dict(self.artifacts.get("capacity", {}),
                               stats=self.capacity_stats.report())
                          if self.capacity_stats is not None else
@@ -302,6 +327,63 @@ class MatmulPlan:
             return None
         return dict(self.artifacts.get("capacity", {}),
                     stats=self.capacity_stats.report())
+
+    @property
+    def pattern(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """``(row_idx, col_idx)`` host block indices baked into an
+        executable static plan (None otherwise).  The slot order is the
+        values order the plan executes with."""
+        return self.artifacts.get("_pattern")
+
+    def evolve(self, new_pattern, *, rerace: Optional[bool] = None,
+               x=None) -> "MatmulPlan":
+        """Incremental plan mutation for dynamic sparse training
+        (RigL-style topology updates on a *static* plan).
+
+        Re-runs only the cheap host pattern phases -- tile packing
+        (``plan_packing``), backward transpose (``plan_transpose``),
+        TP k-sharding (``plan_k_shards``), grouped-capacity sizing --
+        and keeps the existing route verdict, backward verdicts, and
+        disk decision record: a no-drift evolve performs **zero** route
+        decisions and **zero** measurements.  A full re-race runs only
+        when the pattern's density/tile-occupancy profile drifts past
+        ``ctx.evolve_drift`` relative to the profile the verdicts were
+        raced on (or when ``rerace=True`` forces it; ``rerace=False``
+        suppresses even the drift trip).  The evolution lineage
+        (parent/root keys, generation, drift, re-race verdict) rides in
+        ``explain()["evolution"]`` and the persisted decision record.
+
+        ``new_pattern`` is a static ``BlockSparseMatrix`` (values
+        ignored), a bool block mask over the ``[m/b, k/b]`` grid, or a
+        ``(row_idx, col_idx)`` tuple.  ``x`` is used only when a
+        re-race measures (``ctx.measure`` + concrete inputs).  Use
+        ``carry_values(old_values)`` on the result to map the old
+        values stack into the new pattern's slots.
+        """
+        s = self.spec
+        if s.kind != "static" or s.op != "spmm":
+            raise ValueError(
+                f"evolve() mutates static spmm plans; this plan is "
+                f"kind={s.kind!r} op={s.op!r} (dynamic-kind patterns "
+                f"are runtime data -- change the operand, not the plan)")
+        if self._execute is None or self.pattern is None:
+            raise ValueError(
+                "cannot evolve a spec-only (report-only) plan: the "
+                "concrete pattern is required; build the plan from the "
+                "operand")
+        return _evolve_plan(self, _as_static_bsr(new_pattern, s),
+                            rerace, x)
+
+    def carry_values(self, old_values) -> jax.Array:
+        """Map the parent pattern's ``[nnz_old, b, b]`` values into this
+        evolved plan's slots: carried blocks keep their values, grown
+        blocks start at zero (RigL semantics).  Jit-compatible."""
+        ep = self.artifacts.get("_evolve")
+        if ep is None:
+            raise ValueError(
+                "carry_values() needs an evolved plan (the result of "
+                "plan.evolve(...)); this plan has no evolution parent")
+        return partitioner.apply_evolution(ep, old_values)
 
 
 def format_plan(plan: MatmulPlan) -> str:
@@ -338,6 +420,15 @@ def format_plan(plan: MatmulPlan) -> str:
                 + (", disk-cached" if g.get("from_disk") else "") + ")")
         else:
             extra.append(f"grad: {g.get('mode')}")
+    ev = art.get("evolution")
+    if ev:
+        thr = ev.get("drift_threshold")
+        extra.append(
+            f"evolution: gen {ev['generation']} "
+            f"(+{ev['grown']}/-{ev['dropped']} blocks, drift "
+            f"{ev['drift']:.3f}/{'off' if thr is None else thr}"
+            + (", re-raced" if ev.get("reraced")
+               else ", verdicts reused") + ")")
     if "grouped_tile" in art:
         t = art["grouped_tile"]
         cap = art.get("grouped_tiles_cap")   # exact for static kind
@@ -416,6 +507,17 @@ def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
     grad = (("grad", ctx.grad_mode, ctx.sddmm_mode)
             if _grad_covered(spec, ctx) else ())
     return ("plan", spec.op, spec.mode) + base + tp + cap + grad
+
+
+def _mem_key(fp: tuple, pkey, ctx: PlanContext) -> tuple:
+    """In-memory plan-cache identity: fingerprint + concrete pattern +
+    persistence policy + the runtime-only knobs that change plan
+    *behavior* without changing the route or the disk verdict
+    (overflow guardrail, telemetry, evolution drift threshold)."""
+    persist_key = (ctx.resolved_cache_dir() if ctx.persistence_on()
+                   else None)
+    return (fp, pkey, persist_key, ctx.overflow_threshold,
+            ctx.telemetry, ctx.evolve_drift)
 
 
 def _tp_estimate(spec: OpSpec, q: int,
@@ -692,7 +794,11 @@ def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
     rows = np.asarray(operand.row_idx, np.int32)
     cols = np.asarray(operand.col_idx, np.int32)
     interpret = ctx.interpret
-    art: Dict[str, Any] = {"nnz_blocks": len(rows)}
+    # the baked pattern rides along (underscore = working state, not
+    # report material): evolve() needs it to build the carry map and
+    # the drift reference without re-deriving it from the caller
+    art: Dict[str, Any] = {"nnz_blocks": len(rows),
+                           "_pattern": (rows, cols)}
 
     if route == "static_xla":
         fn = _ssp.make_spmm(rows, cols, (mb, kb), b)
@@ -1218,6 +1324,223 @@ def _build_executor(spec: OpSpec, route: str, ctx: PlanContext,
 
 
 # ---------------------------------------------------------------------------
+# Incremental plan mutation (MatmulPlan.evolve): dynamic sparse training
+# with evolving static patterns.  A RigL topology step re-runs only the
+# cheap host pattern phases (plan_packing / plan_transpose /
+# plan_k_shards / grouped-capacity sizing -- all inside the executor
+# builders) and inherits the parent's route + backward verdicts; the
+# expensive decide/measure machinery re-runs only when the pattern
+# profile drifts past ctx.evolve_drift (or rerace=True forces it).
+# ---------------------------------------------------------------------------
+
+
+def _as_static_bsr(new_pattern, spec: OpSpec) -> BlockSparseMatrix:
+    """Normalize evolve()'s pattern argument to a static BSR with
+    placeholder values (executor closures bake pattern metadata only;
+    live values flow through the plan per call)."""
+    b = spec.block_size
+    mb, kb = spec.m // b, spec.k // b
+    if isinstance(new_pattern, BlockSparseMatrix):
+        if not new_pattern.is_static:
+            raise ValueError(
+                "evolve() needs a static (host-indexed) pattern; a "
+                "runtime pattern is dynamic-kind data, not a plan "
+                "mutation")
+        if new_pattern.shape != (spec.m, spec.k) \
+                or new_pattern.block_size != b:
+            raise ValueError(
+                f"evolved pattern shape {new_pattern.shape} block "
+                f"{new_pattern.block_size} != plan's "
+                f"({spec.m}, {spec.k}) block {b} -- evolve changes the "
+                f"pattern, never the problem")
+        return new_pattern.validate_pattern()
+    if isinstance(new_pattern, tuple) and len(new_pattern) == 2:
+        rows = np.asarray(new_pattern[0], np.int32)
+        cols = np.asarray(new_pattern[1], np.int32)
+        bsr = BlockSparseMatrix(jnp.zeros((len(rows), b, b), spec.dtype),
+                                rows, cols, (spec.m, spec.k), b)
+        return bsr.validate_pattern()
+    mask = np.asarray(new_pattern, bool)
+    if mask.shape != (mb, kb):
+        raise ValueError(f"evolved block mask shape {mask.shape} != "
+                         f"grid {(mb, kb)}")
+    return BlockSparseMatrix.from_mask(mask, b, dtype=spec.dtype)
+
+
+def _pattern_profile(rows: np.ndarray, cols: np.ndarray,
+                     spec: OpSpec) -> Dict[str, float]:
+    """The drift metric's inputs: block density + MXU-tile packing
+    occupancy (the two pattern properties the dispatch cost model and
+    the Pallas grid actually price)."""
+    b = spec.block_size
+    mb, kb = spec.m // b, spec.k // b
+    t = b * max(1, 128 // b)
+    meta = partitioner.plan_packing(rows, cols, (spec.m, spec.k), b,
+                                    t, t)
+    return {"density": len(rows) / max(1, mb * kb),
+            "occupancy": meta.occupancy}
+
+
+def _persist_lineage(ctx: PlanContext, p: "MatmulPlan", lineage: dict,
+                     grad_art: Optional[dict] = None) -> None:
+    """Write the evolved verdict + lineage at the evolved pattern's
+    fingerprint, so a restart replays fwd+bwd for the evolved pattern
+    with zero measurements and the lineage survives the process."""
+    if not (ctx.cache and ctx.persistence_on()):
+        return
+    cdir = ctx.resolved_cache_dir()
+    rec = cache_lib.load_decision(cdir, p.key)
+    if rec is None:
+        rec = {"route": p.route, "source": p.source,
+               "est_seconds": {r: float(v)
+                               for r, v in p.est_seconds.items()}}
+        if grad_art and grad_art.get("mode") == "planned" \
+                and "dx" in grad_art:
+            rec["grad"] = {
+                side: {k2: v for k2, v in grad_art[side].items()
+                       if k2 in ("route", "source", "est_seconds")}
+                for side in ("dx", "dvalues")}
+    cache_lib.store_decision(cdir, p.key, dict(rec, evolution=lineage))
+
+
+def _evolve_plan(parent: "MatmulPlan", new_bsr: BlockSparseMatrix,
+                 rerace: Optional[bool], x) -> "MatmulPlan":
+    ctx = parent.ctx
+    old_rows, old_cols = parent.pattern
+    new_rows = np.asarray(new_bsr.row_idx, np.int32)
+    new_cols = np.asarray(new_bsr.col_idx, np.int32)
+    new_spec = OpSpec.from_operand(new_bsr, parent.spec.n,
+                                   mode=parent.spec.mode)
+    b = new_spec.block_size
+    grid = (new_spec.m // b, new_spec.k // b)
+    eplan = partitioner.plan_evolution(old_rows, old_cols, new_rows,
+                                       new_cols, grid)
+    prof = _pattern_profile(new_rows, new_cols, new_spec)
+    parent_ev = parent.artifacts.get("evolution")
+    if parent_ev:
+        # the drift reference is inherited through the evolve chain (it
+        # is the profile the live verdicts were actually raced on) and
+        # resets only on a re-race
+        ref_d = parent_ev["ref_density"]
+        ref_o = parent_ev["ref_occupancy"]
+        gen = parent_ev["generation"] + 1
+        root = parent_ev["root_key"]
+    else:
+        ref = _pattern_profile(np.asarray(old_rows),
+                               np.asarray(old_cols), parent.spec)
+        ref_d, ref_o = ref["density"], ref["occupancy"]
+        gen, root = 1, parent.key
+    thr = ctx.evolve_drift
+    drift = max(abs(prof["density"] - ref_d) / max(ref_d, 1e-12),
+                abs(prof["occupancy"] - ref_o) / max(ref_o, 1e-12))
+    tripped = thr is not None and drift > thr
+    do_rerace = tripped if rerace is None else bool(rerace)
+    with _plan_lock:
+        _evolution_totals["evolves"] += 1
+        if tripped:
+            _evolution_totals["drift_trips"] += 1
+        if do_rerace:
+            _evolution_totals["reraces"] += 1
+
+    lineage = {
+        "parent_key": parent.key, "root_key": root, "generation": gen,
+        "drift": round(float(drift), 6), "drift_threshold": thr,
+        "drift_tripped": bool(tripped), "reraced": bool(do_rerace),
+        "carried": eplan.carried, "dropped": eplan.dropped,
+        "grown": eplan.grown,
+        "density": round(prof["density"], 6),
+        "occupancy": round(prof["occupancy"], 6),
+    }
+
+    if do_rerace:
+        # full plan(): decide (and measure, given ctx.measure + concrete
+        # x) from scratch; the drift reference resets to this profile
+        lineage.update(ref_density=round(prof["density"], 6),
+                       ref_occupancy=round(prof["occupancy"], 6))
+        p = plan(new_bsr, new_spec.n, x=x, ctx=ctx)
+        p.artifacts["evolution"] = lineage
+        p.artifacts["_evolve"] = eplan
+        _persist_lineage(ctx, p, lineage, p.artifacts.get("grad"))
+        return p
+
+    lineage.update(ref_density=round(float(ref_d), 6),
+                   ref_occupancy=round(float(ref_o), 6))
+    # verdict-reuse path: rebuild the executor (the cheap host pattern
+    # phases only) and replay the parent's route + backward verdicts --
+    # zero decisions, zero measurements
+    fp = _fingerprint(new_spec, ctx)
+    key_str = cache_lib.key_string(fp)
+    execute, artifacts = _static_executor(new_spec, parent.route, ctx,
+                                          new_bsr)
+    parent_grad = parent.artifacts.get("grad")
+    inherited_grad = None
+    if parent_grad and parent_grad.get("mode") == "planned" \
+            and "dx" in parent_grad:
+        inherited_grad = {"dx": dict(parent_grad["dx"]),
+                          "dvalues": dict(parent_grad["dvalues"])}
+    execute, grad_art = _wrap_grad(new_spec, parent.route, ctx, new_bsr,
+                                   x, execute, inherited_grad)
+    if grad_art is not None:
+        if inherited_grad is not None \
+                and grad_art.get("mode") == "planned":
+            # _grad_decide's replay labels its input "from_disk"; these
+            # verdicts were inherited from the parent plan in memory --
+            # report the parent's disk provenance instead
+            grad_art = dict(grad_art, evolved=True,
+                            from_disk=parent_grad.get("from_disk",
+                                                      False))
+        artifacts["grad"] = grad_art
+    if "tp" in parent.artifacts:
+        artifacts["tp"] = parent.artifacts["tp"]
+    artifacts["evolution"] = lineage
+    artifacts["_evolve"] = eplan
+    p = MatmulPlan(spec=new_spec, route=parent.route,
+                   source=parent.source,
+                   est_seconds=dict(parent.est_seconds),
+                   from_disk=parent.from_disk, ctx=ctx, key=key_str,
+                   artifacts=artifacts, _execute=execute,
+                   capacity_stats=None)
+    cache_lib.bump("plans_built")
+    if ctx.cache:
+        with _plan_lock:
+            # overwrite, not setdefault: the evolved plan IS the
+            # continuation for this pattern -- spmm()/SparseLinear calls
+            # on the new pattern must hit it with zero decisions
+            _plan_cache[_mem_key(fp, pattern_key(new_bsr), ctx)] = p
+    _persist_lineage(ctx, p, lineage, grad_art)
+    return p
+
+
+def evolve(plan_: "MatmulPlan", new_pattern, *,
+           rerace: Optional[bool] = None, x=None) -> "MatmulPlan":
+    """Module-level spelling of ``plan.evolve(new_pattern)`` (see
+    ``MatmulPlan.evolve``)."""
+    return plan_.evolve(new_pattern, rerace=rerace, x=x)
+
+
+def evolve_plans(old_pattern, new_pattern) -> int:
+    """Evolve every cached executable static-spmm plan built on
+    ``old_pattern`` onto ``new_pattern`` (any n / policy) -- the layer
+    hook: after a RigL topology update the next forward on the new
+    pattern is a plan-cache hit with zero decisions.  Both arguments
+    are static ``BlockSparseMatrix`` (values ignored).  Returns the
+    number of plans evolved."""
+    pk_old = pattern_key(old_pattern)
+    if pk_old is None:
+        raise ValueError("evolve_plans() needs static patterns")
+    with _plan_lock:
+        matches = [p for mk, p in _plan_cache.items()
+                   if mk[1] == pk_old]
+    count = 0
+    for p in matches:
+        if (p.spec.kind == "static" and p.spec.op == "spmm"
+                and p.executable):
+            p.evolve(new_pattern)
+            count += 1
+    return count
+
+
+# ---------------------------------------------------------------------------
 # plan() + conveniences
 # ---------------------------------------------------------------------------
 
@@ -1275,16 +1598,10 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
 
     pkey = pattern_key(operand) if operand is not None else None
     fp = _fingerprint(spec, ctx)
-    # the persistence policy is part of the plan-cache identity: a plan
-    # built without persistence must not shadow a later persistent
-    # request (which still needs to write/read the disk cache)
-    persist_key = (ctx.resolved_cache_dir() if ctx.persistence_on()
-                   else None)
-    # runtime-only capacity knobs key the in-memory cache (a plan with
-    # telemetry/guardrail off must not be satisfied by one built with
-    # them on) but not the disk fingerprint -- see _fingerprint
-    mem_key = (fp, pkey, persist_key,
-               ctx.overflow_threshold, ctx.telemetry)
+    # the persistence policy and the runtime-only knobs are part of the
+    # in-memory plan-cache identity but not the disk fingerprint -- see
+    # _mem_key / _fingerprint
+    mem_key = _mem_key(fp, pkey, ctx)
     if ctx.cache:
         hit = _plan_cache.get(mem_key)
         if hit is not None:

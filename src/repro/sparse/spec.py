@@ -263,6 +263,21 @@ class PlanContext:
     sddmm_mode  route policy for the dL/dvalues sibling product (block
                 SDDMM): "auto" races ``dispatch.SDDMM_ROUTES``; a route
                 id forces it.  Part of the plan fingerprint.
+
+    Evolution policy (``MatmulPlan.evolve`` -- dynamic sparse training
+    on static plans):
+
+    evolve_drift  relative drift of the pattern *profile* (block density
+                  and 128-tile packing occupancy, vs the profile the
+                  route verdicts were raced on) above which ``evolve``
+                  re-races the routes instead of reusing the verdicts.
+                  RigL-style constant-nnz updates drift ~0 and keep the
+                  cheap path; a pruning schedule that halves density
+                  trips it.  0.0 re-races on any profile change; None
+                  never auto-re-races.  A runtime-only knob (in-memory
+                  plan-cache key, not the disk fingerprint); the value
+                  and the observed drift are recorded in the decision
+                  record's evolution lineage.
     """
 
     mode: str = "auto"
@@ -284,8 +299,12 @@ class PlanContext:
     telemetry: bool = True
     grad_mode: str = "auto"
     sddmm_mode: str = "auto"
+    evolve_drift: Optional[float] = 0.25
 
     def __post_init__(self):
+        if self.evolve_drift is not None and self.evolve_drift < 0:
+            raise ValueError(f"evolve_drift must be >= 0 or None, got "
+                             f"{self.evolve_drift}")
         if self.mode not in PLAN_MODES:
             raise ValueError(f"unknown plan mode {self.mode!r}; expected "
                              f"one of {PLAN_MODES}")

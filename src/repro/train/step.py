@@ -92,6 +92,35 @@ def microbatch_grads(grad_fn, params, batch, accum: int):
             jax.tree.map(lambda g: g * inv, grads))
 
 
+def rigl_evolve(plan_, values, dense_grad, *, fraction: float, rng):
+    """One RigL topology step on a *static* sparse plan: drop the
+    ``fraction`` lowest-|W| active blocks, regrow by largest |dense
+    gradient|, then ``plan.evolve`` onto the new pattern and carry the
+    surviving values (grown blocks start at zero, RigL's convention).
+
+    ``dense_grad`` is the dense-position gradient ``dL/dW`` at every
+    block (active and inactive) -- for an spmm plan ``y = W @ x`` that
+    is ``dy @ x.T``.  Returns ``(new_plan, new_values)``.  Constant nnz
+    by construction, so the evolved plan re-uses the parent's route and
+    backward verdicts unless the drift guardrail trips.
+    """
+    import numpy as np
+
+    from repro.core import pruning
+    from repro.core.bsr import BlockSparseMatrix
+
+    s = plan_.spec
+    rows, cols = plan_.pattern
+    b = s.block_size
+    bsr = BlockSparseMatrix(values, rows, cols, (s.m, s.k), b)
+    new_mask = pruning.rigl_update(
+        bsr.to_dense(), jnp.asarray(dense_grad),
+        jnp.asarray(bsr.block_mask()), block_size=b,
+        fraction=fraction, rng=rng)
+    new_plan = plan_.evolve(np.asarray(new_mask))
+    return new_plan, new_plan.carry_values(values)
+
+
 def make_train_step(lm: LM, hp: TrainHParams = TrainHParams()):
     def loss_fn(params, batch):
         loss, metrics = lm.loss(params, batch)

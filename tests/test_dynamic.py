@@ -104,3 +104,36 @@ def test_rigl_update_preserves_density():
                       rng=jax.random.PRNGKey(3))
     assert int(new.sum()) == int(mask.sum())
     assert bool((new != mask).any())
+
+
+def test_rigl_update_clamps_move_count_at_high_density():
+    # regression: at density ~1 there are fewer inactive blocks than
+    # drop candidates -- an unclamped n_move dropped more blocks than it
+    # could grow, silently shrinking the active set below d_max capacity
+    from repro.core.pruning import rigl_update
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    g = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    for density, fraction in ((0.9, 1.0), (1.0, 1.0), (0.95, 0.7)):
+        mask = jnp.asarray(
+            masks.random_block_mask(64, 64, 8, density, seed=2))
+        new = rigl_update(w, g, mask, block_size=8, fraction=fraction,
+                          rng=jax.random.PRNGKey(3))
+        assert int(new.sum()) == int(mask.sum()), (density, fraction)
+
+
+def test_rigl_update_rng_breaks_grow_ties():
+    # with an all-zero gradient every inactive block is a grow tie;
+    # regrowth must depend on rng (a deterministic argsort would grow
+    # the lowest block indices every step, biasing the topology)
+    from repro.core.pruning import rigl_update
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    g = jnp.zeros((64, 64))
+    mask = jnp.asarray(masks.random_block_mask(64, 64, 8, 0.25, seed=2))
+    grown = []
+    for seed in range(4):
+        new = rigl_update(w, g, mask, block_size=8, fraction=0.5,
+                          rng=jax.random.PRNGKey(seed))
+        assert int(new.sum()) == int(mask.sum())
+        grown.append(tuple(np.flatnonzero(
+            np.asarray(new) & ~np.asarray(mask)).tolist()))
+    assert len(set(grown)) > 1, "regrowth ignored rng on tied scores"

@@ -1,0 +1,351 @@
+"""MatmulPlan.evolve -- incremental plan mutation for dynamic sparse
+training (RigL-style topology updates on static plans).
+
+The tentpole invariants under test:
+
+* an in-threshold evolve re-runs only host pattern phases: ZERO route
+  decisions and ZERO measurement events (asserted via cache counters);
+* values round-trip through ``carry_values`` (carried blocks keep their
+  values exactly, grown blocks start at zero);
+* drift past ``PlanContext.evolve_drift`` (or ``rerace=True``) re-races;
+* evolved plans are jit/grad-safe and register in the plan cache, so
+  ``sparse.spmm`` on the new pattern is a decision-free hit;
+* the disk record at the evolved key carries the evolution lineage and
+  replays (fwd + bwd) on a simulated restart with zero measurements;
+* a v4 (pre-evolution-schema) cache file is invalidated wholesale.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sparse
+from repro.core import masks, partitioner
+from repro.core.bsr import BlockSparseMatrix
+
+M = K = 256
+B = 16
+N = 32
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sparse.reset()
+    yield
+    sparse.reset()
+
+
+def _problem(density=0.25, seed=0):
+    mask = masks.random_block_mask(M, K, B, density, seed=seed)
+    bsr = BlockSparseMatrix.from_mask(mask, B, init="normal",
+                                      key=jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (K, N))
+    return mask, bsr, x
+
+
+def _move_one(mask):
+    """Constant-nnz single-block move (the minimal topology update)."""
+    new = mask.copy()
+    r, c = np.nonzero(new)
+    zr, zc = np.nonzero(~new)
+    new[r[0], c[0]] = False
+    new[zr[0], zc[0]] = True
+    return new
+
+
+# -- verdict reuse (the tentpole acceptance criterion) ---------------------------------
+
+def test_evolve_runs_zero_decisions_and_measurements():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, x=x, ctx=sparse.PlanContext())
+    s0 = sparse.cache_stats()
+    p2 = p.evolve(_move_one(mask))
+    s1 = sparse.cache_stats()
+    assert s1["decisions"] == s0["decisions"]
+    assert s1["measurements"] == s0["measurements"]
+    assert s1["plans_built"] == s0["plans_built"] + 1
+    assert p2.route == p.route
+    ev = p2.explain()["evolution"]
+    assert ev["generation"] == 1 and not ev["reraced"]
+    assert ev["carried"] == bsr.nnz_blocks - 1
+    assert ev["dropped"] == 1 and ev["grown"] == 1
+
+
+def test_evolve_reuses_backward_verdicts():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, x=x, ctx=sparse.PlanContext())
+    g = p.explain()["grad"]
+    assert g["mode"] == "planned"
+    p2 = p.evolve(_move_one(mask))
+    g2 = p2.explain()["grad"]
+    assert g2["mode"] == "planned" and g2["evolved"]
+    assert g2["dx"]["route"] == g["dx"]["route"]
+    assert g2["dvalues"]["route"] == g["dvalues"]["route"]
+    # inherited from the parent in memory, not read from disk
+    assert not g2["from_disk"]
+
+
+def test_evolved_plan_registers_in_plan_cache():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, x=x, ctx=sparse.PlanContext())
+    new_mask = _move_one(mask)
+    p2 = p.evolve(new_mask)
+    bsr2 = BlockSparseMatrix.from_mask(new_mask, B, init="normal",
+                                       key=jax.random.PRNGKey(9))
+    s0 = sparse.cache_stats()
+    y = sparse.spmm(bsr2, x)          # must be a plan-cache hit
+    s1 = sparse.cache_stats()
+    assert s1["decisions"] == s0["decisions"]
+    assert s1["plan_hits"] == s0["plan_hits"] + 1
+    assert sparse.plan(bsr2, N, ctx=sparse.PlanContext()) is p2
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(bsr2.to_dense() @ x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- value carry -----------------------------------------------------------------------
+
+def test_carry_values_round_trip():
+    # grow-only superset B of A: evolving A -> B -> A must hand back
+    # every original value exactly
+    mask, bsr, x = _problem(density=0.125)
+    sup = mask.copy()
+    zr, zc = np.nonzero(~sup)
+    sup[zr[:5], zc[:5]] = True        # 5 grown blocks
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext())
+    p_up = p.evolve(sup)
+    v_up = p_up.carry_values(bsr.values)
+    assert v_up.shape[0] == bsr.nnz_blocks + 5
+    p_back = p_up.evolve(mask)
+    v_back = p_back.carry_values(v_up)
+    np.testing.assert_array_equal(np.asarray(v_back),
+                                  np.asarray(bsr.values))
+    # grown blocks start at zero on the way up
+    ep = p_up.artifacts["_evolve"]
+    grown_rows = np.asarray(v_up)[np.asarray(ep.src_slot) < 0]
+    assert grown_rows.shape[0] == 5 and not grown_rows.any()
+
+
+def test_evolved_plan_matches_dense_reference():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext())
+    new_mask = _move_one(mask)
+    p2 = p.evolve(new_mask)
+    vals = p2.carry_values(bsr.values)
+    rows, cols = p2.pattern
+    dense = BlockSparseMatrix(vals, rows, cols, (M, K), B).to_dense()
+    np.testing.assert_allclose(np.asarray(p2(vals, x)),
+                               np.asarray(dense @ x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- drift guardrail -------------------------------------------------------------------
+
+def test_drift_trip_reraces():
+    mask, bsr, x = _problem(density=1 / 16)
+    p = sparse.plan(bsr, N, x=x, ctx=sparse.PlanContext())
+    dense_mask = masks.random_block_mask(M, K, B, 0.5, seed=3)
+    s0 = sparse.cache_stats()
+    p2 = p.evolve(dense_mask)         # 8x the density: way past 0.25
+    s1 = sparse.cache_stats()
+    ev = p2.explain()["evolution"]
+    assert ev["drift_tripped"] and ev["reraced"]
+    assert ev["drift"] > 0.25
+    assert s1["decisions"] > s0["decisions"]  # a real re-race happened
+    # the drift reference reset to the re-raced profile
+    assert ev["ref_density"] == ev["density"]
+    totals = sparse.plan_report()["totals"]["evolution"]
+    assert totals["reraces"] == 1 and totals["drift_trips"] == 1
+
+
+def test_rerace_flag_forces_rerace():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, x=x, ctx=sparse.PlanContext())
+    s0 = sparse.cache_stats()
+    p2 = p.evolve(_move_one(mask), rerace=True)
+    s1 = sparse.cache_stats()
+    assert p2.explain()["evolution"]["reraced"]
+    assert not p2.explain()["evolution"]["drift_tripped"]
+    assert s1["decisions"] > s0["decisions"]
+
+
+def test_evolve_drift_knob():
+    mask, bsr, x = _problem()
+    # 0.0: any change trips; None: never trips
+    for thr, expect_trip in ((0.0, True), (None, False)):
+        sparse.reset()
+        ctx = sparse.PlanContext(evolve_drift=thr)
+        p = sparse.plan(bsr, N, x=x, ctx=ctx)
+        new = mask.copy()
+        r, c = np.nonzero(new)
+        new[r[0], c[0]] = False       # drop one block: density changes
+        ev = p.evolve(new).explain()["evolution"]
+        assert ev["drift_tripped"] is expect_trip, thr
+        assert ev["reraced"] is expect_trip
+    with pytest.raises(ValueError):
+        sparse.PlanContext(evolve_drift=-0.5)
+
+
+def test_evolve_drift_in_mem_key():
+    # same pattern, different drift policy -> different cached plans
+    mask, bsr, x = _problem()
+    p1 = sparse.plan(bsr, N, ctx=sparse.PlanContext(evolve_drift=0.25))
+    p2 = sparse.plan(bsr, N, ctx=sparse.PlanContext(evolve_drift=None))
+    assert p1 is not p2
+
+
+# -- jit / grad safety ------------------------------------------------------------------
+
+def test_evolved_plan_jit_and_grad_safe():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext())
+    p2 = p.evolve(_move_one(mask))
+    vals = p2.carry_values(bsr.values)
+    rows, cols = p2.pattern
+    dense_ref = lambda v: BlockSparseMatrix(
+        v, rows, cols, (M, K), B).to_dense()
+
+    fwd = jax.jit(lambda v, xx: p2(v, xx))
+    np.testing.assert_allclose(np.asarray(fwd(vals, x)),
+                               np.asarray(dense_ref(vals) @ x),
+                               rtol=1e-4, atol=1e-4)
+    g = jax.jit(jax.grad(lambda v, xx: jnp.sum(p2(v, xx) ** 2)))(vals, x)
+    g_ref = jax.grad(
+        lambda v, xx: jnp.sum((dense_ref(v) @ xx) ** 2))(vals, x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- a real dynamic-sparse-training loop ------------------------------------------------
+
+def test_rigl_training_loop_constant_nnz_zero_reraces():
+    from repro.train.step import rigl_evolve
+    mask, bsr, x = _problem(density=0.25)
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext())
+    vals = bsr.values
+    nnz = vals.shape[0]
+    key = jax.random.PRNGKey(0)
+    s0 = sparse.cache_stats()
+    for step in range(20):
+        key, kr, kx = jax.random.split(key, 3)
+        xb = jax.random.normal(kx, (K, N))
+        y = p(vals, xb)
+        p, vals = rigl_evolve(p, vals, y @ xb.T, fraction=0.2, rng=kr)
+        assert vals.shape[0] == nnz           # constant-nnz invariant
+    s1 = sparse.cache_stats()
+    assert s1["measurements"] == s0["measurements"]
+    assert s1["decisions"] == s0["decisions"]
+    totals = sparse.plan_report()["totals"]["evolution"]
+    assert totals["evolves"] == 20 and totals["reraces"] == 0
+    assert p.explain()["evolution"]["generation"] == 20
+    # numerics still exact after 20 topology updates
+    rows, cols = p.pattern
+    dense = BlockSparseMatrix(vals, rows, cols, (M, K), B).to_dense()
+    np.testing.assert_allclose(np.asarray(p(vals, x)),
+                               np.asarray(dense @ x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_linear_evolve_hook():
+    from repro.core.sparse_layers import SparseLinear
+    lyr = SparseLinear.random_pattern(None, K, M, B, 0.25, seed=1)
+    params = lyr.init(jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, K))
+    y0 = lyr.apply(params, x)
+    assert y0.shape == (8, M)
+    new_mask = _move_one(lyr.pattern)
+    s0 = sparse.cache_stats()
+    lyr2, params2 = lyr.evolve(new_mask, params)
+    y2 = lyr2.apply(params2, x)
+    s1 = sparse.cache_stats()
+    assert s1["decisions"] == s0["decisions"]     # evolve, not re-plan
+    assert np.array_equal(lyr2.pattern, new_mask)
+    assert params2["values"].shape == params["values"].shape
+    ref = (x @ lyr2.as_bsr(params2).to_dense().T)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- validation -------------------------------------------------------------------------
+
+def test_evolve_rejects_wrong_geometry():
+    mask, bsr, x = _problem()
+    p = sparse.plan(bsr, N, ctx=sparse.PlanContext())
+    with pytest.raises(ValueError, match="grid"):
+        p.evolve(np.ones((4, 4), bool))
+    with pytest.raises(ValueError, match="duplicate"):
+        p.evolve((np.array([0, 0], np.int32), np.array([0, 0], np.int32)))
+
+
+def test_duplicate_blocks_rejected_everywhere():
+    dup_r = np.array([0, 1, 0], np.int32)
+    dup_c = np.array([2, 3, 2], np.int32)
+    with pytest.raises(ValueError, match="duplicate"):
+        partitioner.plan_packing(dup_r, dup_c, (64, 64), 16)
+    with pytest.raises(ValueError, match="duplicate"):
+        partitioner.plan_evolution(dup_r, dup_c, dup_r[:1], dup_c[:1],
+                                   (4, 4))
+    vals = jnp.zeros((3, 16, 16))
+    with pytest.raises(ValueError, match="duplicate"):
+        BlockSparseMatrix(vals, dup_r, dup_c, (64, 64),
+                          16).validate_pattern()
+
+
+def test_balance_report_empty_counts():
+    rep = partitioner.balance_report(np.array([], np.int64))
+    assert rep == {"max": 0, "min": 0, "mean": 0.0, "imbalance": 0.0,
+                   "padding_waste": 0.0}
+
+
+# -- persistence ------------------------------------------------------------------------
+
+def test_evolution_lineage_persists_and_replays(tmp_path):
+    mask, bsr, x = _problem()
+    ctx = sparse.PlanContext(cache_dir=str(tmp_path))
+    p = sparse.plan(bsr, N, x=x, ctx=ctx)
+    new_mask = _move_one(mask)
+    p2 = p.evolve(new_mask)
+    path = os.path.join(
+        str(tmp_path), f"sparse-plans-v{sparse.SCHEMA_VERSION}.json")
+    with open(path) as f:
+        rec = json.load(f)["entries"][p2.key]
+    assert rec["evolution"]["generation"] == 1
+    assert rec["evolution"]["reraced"] is False
+    assert rec["route"] == p2.route and "grad" in rec
+
+    # simulated restart: the evolved pattern replays fwd + bwd verdicts
+    # from disk with zero measurements
+    sparse.reset()
+    bsr2 = BlockSparseMatrix.from_mask(new_mask, B, init="normal",
+                                       key=jax.random.PRNGKey(5))
+    p3 = sparse.plan(bsr2, N, ctx=ctx)
+    s = sparse.cache_stats()
+    assert p3.from_disk and s["measurements"] == 0
+    assert p3.route == p2.route
+    assert p3.explain()["grad"]["from_disk"]
+
+
+def test_pre_evolution_v4_cache_file_invalidated(tmp_path):
+    """A v4 (pre-evolution-schema) file is ignored wholesale: its
+    records carry no evolution lineage, so an evolved pattern's verdict
+    provenance would be unrecorded after a restart."""
+    mask, bsr, x = _problem()
+    ctx = sparse.PlanContext(cache_dir=str(tmp_path))
+    key = sparse.plan(bsr, N, ctx=ctx).key
+    sparse.reset()
+    os.remove(os.path.join(
+        str(tmp_path), f"sparse-plans-v{sparse.SCHEMA_VERSION}.json"))
+    old = {"env": {"schema": 4, "backend": jax.default_backend(),
+                   "jax": jax.__version__},
+           "entries": {key: {"route": "dense_xla", "source": "measured",
+                             "est_seconds": {}}}}
+    with open(os.path.join(str(tmp_path), "sparse-plans-v4.json"),
+              "w") as f:
+        json.dump(old, f)
+    p = sparse.plan(bsr, N, ctx=ctx)
+    assert not p.from_disk                 # old tag never satisfies
+    assert p.route != "dense_xla" or p.source != "measured"

@@ -25,6 +25,14 @@ noise -- so a 15% tolerance is a real gate, not flake insurance:
 * ``tp_crossover``      ``est_tp_speedup`` (analytic TP-vs-unsharded
                         ratio at q=8).  Measured wall-clock fields are
                         deliberately NOT gated.
+* ``train_grad``        fwd+bwd speedup vs dense plus the route triple
+                        (fwd / dL-dx / dL-dW verdicts).
+* ``pattern_evolution`` evolved-plan fwd+bwd speedup vs dense, the
+                        evolve-vs-measured-re-plan advantage (capped at
+                        2.0 in the suite, so it is effectively a
+                        boolean "evolve stayed cheap"), and the evolve
+                        chain's decision/measurement event count folded
+                        into the gated route string (must stay ``ev0``).
 
 A config present in the baseline but missing from the current run (or
 vice versa) fails: a silently shrunk grid is a coverage regression.
@@ -77,11 +85,30 @@ def _train_grad_ratios(recs):
             for r in recs}
 
 
+def _pattern_evolution_ratios(recs):
+    # two gated ratios per grid point: the evolved plan's deterministic
+    # fwd+bwd speedup over dense, and the (noise-capped at 2.0) measured
+    # advantage of one evolve over a measured from-scratch re-plan.  The
+    # route string folds in the chain's decision/measurement event count
+    # -- an evolve that starts racing routes again flips the route gate,
+    # not just a ratio
+    out = {}
+    for r in recs:
+        k = _key(r, ("m", "b", "density", "n"))
+        route = (f"{r['route']}+{r['dx_route']}+{r['dv_route']}"
+                 f"+ev{r['evolve_measurements']}")
+        out[f"{k}|step"] = {"ratio": r["step_speedup_vs_dense"],
+                            "route": route}
+        out[f"{k}|amortized"] = {"ratio": r["replan_vs_evolve"]}
+    return out
+
+
 EXTRACTORS = {
     "dispatch": _dispatch_ratios,
     "grouped_capacity": _capacity_ratios,
     "tp_crossover": _tp_ratios,
     "train_grad": _train_grad_ratios,
+    "pattern_evolution": _pattern_evolution_ratios,
 }
 
 # runner-dependent fields stripped from baselines on --update, so a
@@ -95,6 +122,9 @@ STRIP_FIELDS = {
                      "tp_wins_measured", "chosen", "source",
                      "q_measured"),
     "train_grad": (),      # all fields are deterministic model outputs
+    # raw evolve/re-plan timings are runner wall-clock; the gate reads
+    # only the capped replan_vs_evolve ratio
+    "pattern_evolution": ("evolve_ms", "replan_ms"),
 }
 
 
