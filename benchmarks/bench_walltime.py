@@ -13,7 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import dynamic_sparse as dsp, masks, static_sparse as ssp
+from repro.core import dynamic_sparse as dsp, static_sparse as ssp
 from repro.core.bsr import BlockSparseMatrix
 
 

@@ -267,7 +267,9 @@ def grouped_capacity(tiny: bool = False):
     ``tiny=True`` is the CI/nightly smoke grid.
     """
     from repro.core import planner
-    from repro.kernels.gmm.ops import grouped_tile_size
+    # capacity sizing needs the kernel's own tile rule, not a matmul
+    # entry point -- sanctioned direct import
+    from repro.kernels.gmm.ops import grouped_tile_size  # repro-lint: disable=R001
     recs = []
     n = 4096
     ms = (2048,) if tiny else (2048, 4096)
@@ -495,9 +497,11 @@ def pattern_evolution(tiny: bool = False):
                     grow = rng.choice(len(off_r), mv, replace=False)
                     mask[act_r[drop], act_c[drop]] = False
                     mask[off_r[grow], off_c[grow]] = True
-                    t0 = time.perf_counter()
+                    # host-side plan mutation cost IS the measurand
+                    # (evolve runs outside jit), so wall-clock is right
+                    t0 = time.perf_counter()  # repro-lint: disable=R005
                     p = p.evolve(mask)
-                    evolve_ts.append(time.perf_counter() - t0)
+                    evolve_ts.append(time.perf_counter() - t0)  # repro-lint: disable=R005
                 s1 = sparse.cache_stats()
                 evolve_events = (s1["decisions"] - s0["decisions"]
                                  + s1["measurements"] - s0["measurements"])
@@ -507,9 +511,9 @@ def pattern_evolution(tiny: bool = False):
                 ebsr = BlockSparseMatrix.from_mask(mask, b, init="zeros")
                 replan_ts = []
                 for _ in range(3):
-                    t0 = time.perf_counter()
+                    t0 = time.perf_counter()  # repro-lint: disable=R005
                     sparse.plan(ebsr, n, x=x, ctx=ctx_m)
-                    replan_ts.append(time.perf_counter() - t0)
+                    replan_ts.append(time.perf_counter() - t0)  # repro-lint: disable=R005
                 evolve_ms = float(np.median(evolve_ts) * 1e3)
                 replan_ms = float(np.median(replan_ts) * 1e3)
                 g = p.explain()["grad"]

@@ -23,7 +23,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses
 
 import jax
 

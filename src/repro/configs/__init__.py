@@ -16,7 +16,6 @@ cache), recorded as a beyond-paper application.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Dict
 

@@ -56,7 +56,7 @@ import dataclasses
 import math
 import threading
 import time
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,11 @@ MODES = ("auto", "dense", "static", "dynamic") + ROUTES
 #                  metadata; gated like the other Pallas routes)
 #   sddmm_dense    full dense dY @ X^T then gather the pattern blocks
 SDDMM_ROUTES = ("sddmm_xla", "sddmm_grouped", "sddmm_dense")
+
+# the authoritative operand-dtype vocabulary every route must cover:
+# kernel CONTRACT declarations (repro.kernels.contract) are checked
+# against this list by tools/lint/contracts.py
+SUPPORTED_DTYPES = ("float32", "bfloat16", "float16")
 
 
 # ---------------------------------------------------------------------------
@@ -648,3 +653,37 @@ def format_explain(report: dict) -> str:
     lines.append(f"   ({report['source']}"
                  f"{', cached' if report['cached'] else ''})")
     return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts for the routes dispatch itself implements
+# ---------------------------------------------------------------------------
+
+from repro.kernels.contract import KernelContract, register as _register_contract  # noqa: E402
+
+# dense_xla: plain jnp.matmul after densify -- no constraints at all
+DENSE_XLA_CONTRACT = _register_contract(KernelContract(
+    kernel="dense_xla",
+    routes=("dense_xla",),
+    dtypes=SUPPORTED_DTYPES,
+    min_block=1,
+    max_block=1024,
+    divisibility=(),
+    grid="no tile grid: one XLA dot",
+    capacity="dense",
+    pallas=False,
+))
+
+# sddmm_dense: full dense dY @ X^T then gather the pattern blocks; the
+# gather indexes block-rows, so shapes must stay block multiples
+SDDMM_DENSE_CONTRACT = _register_contract(KernelContract(
+    kernel="sddmm_dense",
+    routes=("sddmm_dense",),
+    dtypes=SUPPORTED_DTYPES,
+    min_block=1,
+    max_block=1024,
+    divisibility=("m % b == 0", "k % b == 0"),
+    grid="no tile grid: one XLA dot + block gather",
+    capacity="dense",
+    pallas=False,
+))

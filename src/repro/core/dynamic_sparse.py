@@ -24,9 +24,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
-from repro.core import planner as planner_lib
 from repro.core.bsr import BlockSparseMatrix
 
 
@@ -206,3 +203,25 @@ def dspmm_nt(op: DynamicOperand, x: jax.Array, **kw) -> jax.Array:
     x2 = x.reshape(-1, op.shape[1]).T
     y = dspmm(op, x2, **kw)
     return y.T.reshape(*lead, op.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Kernel contract (tools/lint/contracts.py cross-checks this against
+# the dispatch admissibility gates)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.contract import KernelContract, register as _register_contract  # noqa: E402
+
+# one-hot scatter XLA formulation over the fixed slot array: any
+# block-multiple shape, slot capacity = nnz_max, differentiable
+CONTRACT = _register_contract(KernelContract(
+    kernel="dynamic_xla",
+    routes=("dynamic_xla",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=1024,
+    divisibility=("m % b == 0", "k % b == 0"),
+    grid="no tile grid: slot-wise one-hot scatter-add over mb block rows",
+    capacity="slot_capacity",
+    pallas=False,
+))

@@ -183,8 +183,6 @@ class DynamicSparseLinear:
         scale = 1.0 / np.sqrt(self.in_features * self.d_max)
         w = (jax.random.normal(
             kw, (self.out_features, self.in_features)) * scale).astype(self.dtype)
-        ob = self.out_features // self.block_size
-        ib = self.in_features // self.block_size
         mask = masks_lib.random_block_mask(
             self.out_features, self.in_features, self.block_size,
             self.d_max, seed=int(jax.random.randint(km, (), 0, 2**31 - 1)))
@@ -221,9 +219,10 @@ class SparseFFN:
     dtype: object = jnp.float32
 
     def _layers(self):
-        mk = lambda i, o, s: SparseLinear.random_pattern(
-            None, i, o, self.block_size, self.density, seed=self.seed + s,
-            dtype=self.dtype)
+        def mk(i, o, s):
+            return SparseLinear.random_pattern(
+                None, i, o, self.block_size, self.density,
+                seed=self.seed + s, dtype=self.dtype)
         up = mk(self.d_model, self.d_ff, 1)
         down = mk(self.d_ff, self.d_model, 2)
         gate = mk(self.d_model, self.d_ff, 3) if self.gated else None

@@ -195,3 +195,37 @@ def spmm_cached(bsr: BlockSparseMatrix, x: jax.Array) -> jax.Array:
                            np.asarray(bsr.col_idx, np.int32).tobytes(),
                            bsr.grid, bsr.block_size)
     return f(jnp.asarray(bsr.values), x)
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (tools/lint/contracts.py cross-checks these against
+# the dispatch admissibility gates)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.contract import KernelContract, register as _register_contract  # noqa: E402
+
+# gather/einsum XLA formulations: any BSR pattern (m, k block-multiples
+# by construction), no tile grid, differentiable, run on every backend
+CONTRACT = _register_contract(KernelContract(
+    kernel="static_xla",
+    routes=("static_xla",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=1024,
+    divisibility=("m % b == 0", "k % b == 0"),
+    grid="no tile grid: one gather + einsum + segment-sum program",
+    capacity="exact",
+    pallas=False,
+))
+
+SDDMM_CONTRACT = _register_contract(KernelContract(
+    kernel="sddmm_xla",
+    routes=("sddmm_xla",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=1024,
+    divisibility=("m % b == 0", "k % b == 0"),
+    grid="no tile grid: per-pattern-block gather + einsum from make_sddmm",
+    capacity="exact",
+    pallas=False,
+))

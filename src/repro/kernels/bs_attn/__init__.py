@@ -1,2 +1,21 @@
 from repro.kernels.bs_attn.ops import bs_attn, mask_to_pairs  # noqa: F401
 from repro.kernels.bs_attn.ref import bs_attn_ref  # noqa: F401
+from repro.kernels.contract import KernelContract, register
+
+# block-sparse flash attention: outside the matmul route table (routes
+# empty), declared so the contract checker still audits its gate; the
+# static mask must give every query block-row at least one key block
+# (mask_to_pairs raises otherwise) -- not expressible over m/k/n/b, so
+# it stays a runtime check
+CONTRACT = register(KernelContract(
+    kernel="bs_attn",
+    routes=(),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=128,
+    divisibility=("m % b == 0", "k % b == 0"),
+    grid="heads x q-block-rows, inner walk over the row's visible "
+         "(q, k) block pairs from mask_to_pairs",
+    capacity="exact",
+    pallas=True,
+))

@@ -1,0 +1,133 @@
+"""Static kernel contracts: what each kernel package promises to accept.
+
+Every kernel package (``kernels/{bsmm,dsmm,gmm,sddmm,dense_mm,bs_attn}``)
+and every XLA-formulation module that backs a dispatch route declares a
+frozen :class:`KernelContract` describing the shapes/dtypes it accepts:
+supported dtypes, block-size range, divisibility constraints, the tile
+grid it walks, and its capacity semantics.  The contracts are *static*
+metadata -- importable without a TPU, evaluated without tracing -- so
+``tools/lint/contracts.py`` can cross-check the dispatch admissibility
+gates (``dispatch._candidates`` / ``dispatch.sddmm_candidates``) against
+what the kernels actually accept before anything compiles.
+
+Divisibility constraints are strings of Python over the free variables
+``m, k, n, b`` (operand rows/cols, dense rhs cols, block size), e.g.
+``"m % b == 0"`` or the grouped-tile rule
+``"any(t % b == 0 and m % t == 0 and k % t == 0 for t in range(b, 129))"``.
+They are evaluated with :meth:`KernelContract.admits`, which returns
+``None`` (admitted) or a human-readable rejection reason.
+
+Capacity vocabulary (how the kernel sizes its nonzero storage):
+
+* ``"exact"``           static pattern, storage == nnz blocks
+* ``"planned_bucket"``  expected-tiles x headroom bucket (Appendix A.2)
+* ``"slot_capacity"``   fixed nnz_max slot array, runtime pattern
+* ``"dense"``           no sparsity -- full dense operand
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+CAPACITY_KINDS = ("exact", "planned_bucket", "slot_capacity", "dense")
+
+# the eval sandbox for divisibility expressions: no builtins beyond the
+# comprehension helpers the grouped-tile rule needs
+_EVAL_GLOBALS = {"__builtins__": {}, "any": any, "all": all,
+                 "min": min, "max": max, "range": range}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Declared admissibility of one kernel (or XLA formulation).
+
+    kernel        short package/module name ("bsmm", "static_xla", ...)
+    routes        dispatch route ids this kernel serves (may be empty
+                  for kernels outside the matmul route table, e.g.
+                  bs_attn)
+    dtypes        supported operand dtypes, by name
+    min_block /   inclusive block-size range
+    max_block
+    divisibility  eval-able constraints over {m, k, n, b}; ALL must
+                  hold for a shape to be admitted
+    grid          human-readable tile-grid formula (documentation; the
+                  lint rule only requires it to be non-empty)
+    capacity      one of CAPACITY_KINDS
+    pallas        True if execution requires a Pallas-capable backend
+                  (TPU or interpret mode)
+    """
+
+    kernel: str
+    routes: Tuple[str, ...]
+    dtypes: Tuple[str, ...]
+    min_block: int
+    max_block: int
+    divisibility: Tuple[str, ...]
+    grid: str
+    capacity: str
+    pallas: bool
+
+    def __post_init__(self):
+        if self.capacity not in CAPACITY_KINDS:
+            raise ValueError(f"contract {self.kernel!r}: capacity "
+                             f"{self.capacity!r} not in {CAPACITY_KINDS}")
+        if not (1 <= self.min_block <= self.max_block):
+            raise ValueError(f"contract {self.kernel!r}: bad block range "
+                             f"[{self.min_block}, {self.max_block}]")
+
+    def admits(self, m: int, k: int, n: int, b: int,
+               dtype: str = "float32") -> Optional[str]:
+        """``None`` if the kernel accepts (m, k) @ (k, n) at block size
+        ``b`` in ``dtype``; otherwise the reason it rejects."""
+        if dtype not in self.dtypes:
+            return f"dtype {dtype} not in supported {self.dtypes}"
+        if not (self.min_block <= b <= self.max_block):
+            return (f"block {b} outside [{self.min_block}, "
+                    f"{self.max_block}]")
+        for expr in self.divisibility:
+            # free vars go in globals: comprehensions inside eval open a
+            # new scope that cannot see the locals mapping
+            env = dict(_EVAL_GLOBALS, m=m, k=k, n=n, b=b)
+            if not eval(expr, env):  # noqa: S307 (sandboxed)
+                return f"constraint {expr!r} fails for m={m} k={k} n={n} b={b}"
+        return None
+
+
+_REGISTRY: Dict[str, KernelContract] = {}
+
+
+def register(contract: KernelContract) -> KernelContract:
+    """Register ``contract`` under its kernel name (idempotent; a kernel
+    re-imported under pytest must not trip the duplicate check)."""
+    prev = _REGISTRY.get(contract.kernel)
+    if prev is not None and prev != contract:
+        raise ValueError(f"conflicting contract registration for "
+                         f"{contract.kernel!r}")
+    _REGISTRY[contract.kernel] = contract
+    return contract
+
+
+def all_contracts() -> Dict[str, KernelContract]:
+    return dict(_REGISTRY)
+
+
+def contract_for_route(route: str) -> Optional[KernelContract]:
+    for c in _REGISTRY.values():
+        if route in c.routes:
+            return c
+    return None
+
+
+def load_all() -> Dict[str, KernelContract]:
+    """Import every module that declares a CONTRACT and return the full
+    registry.  This is the entry point the contract checker uses."""
+    import repro.kernels.bsmm      # noqa: F401
+    import repro.kernels.dsmm      # noqa: F401
+    import repro.kernels.gmm       # noqa: F401
+    import repro.kernels.sddmm     # noqa: F401
+    import repro.kernels.dense_mm  # noqa: F401
+    import repro.kernels.bs_attn   # noqa: F401
+    import repro.core.static_sparse   # noqa: F401
+    import repro.core.dynamic_sparse  # noqa: F401
+    import repro.core.dispatch        # noqa: F401
+    return all_contracts()

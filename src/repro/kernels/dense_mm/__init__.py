@@ -1,2 +1,18 @@
 from repro.kernels.dense_mm.ops import dense_mm  # noqa: F401
 from repro.kernels.dense_mm.ref import dense_mm_ref  # noqa: F401
+from repro.kernels.contract import KernelContract, register
+
+# dense tiled baseline: tiles shrink to divisors of every dim, so any
+# shape is admitted; block size is irrelevant (dense has no blocks)
+CONTRACT = register(KernelContract(
+    kernel="dense_mm",
+    routes=("dense_pallas",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=1024,
+    divisibility=(),
+    grid="(m // tm) x (n // tn) x (k // tk), tm/tk/tn = largest "
+         "power-of-two divisor <= 128 per dim",
+    capacity="dense",
+    pallas=True,
+))

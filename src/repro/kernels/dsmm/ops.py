@@ -1,7 +1,6 @@
 """Jit'd wrapper + runtime slot encoder for the dynamic sparse kernel."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.dynamic_sparse import DynamicOperand

@@ -1,2 +1,23 @@
 from repro.kernels.gmm.ops import gmm  # noqa: F401
 from repro.kernels.gmm.ref import gmm_ref  # noqa: F401
+from repro.kernels.contract import KernelContract, register
+
+# grouped (tile-bucketed) SpMM: needs one tile size t <= 128 that is a
+# block multiple dividing both m and k (ops.grouped_tile_size raises
+# otherwise); the bucket is sized expected-tiles x headroom (App. A.2)
+CONTRACT = register(KernelContract(
+    kernel="gmm",
+    routes=("dynamic_grouped",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=128,
+    divisibility=(
+        "m % b == 0", "k % b == 0",
+        "any(t % b == 0 and m % t == 0 and k % t == 0 "
+        "for t in range(b, 129))",
+    ),
+    grid="tiles_cap x (n // tn): planned-capacity walk over packed "
+         "t x t tiles, t = grouped_tile_size(m, k, b)",
+    capacity="planned_bucket",
+    pallas=True,
+))

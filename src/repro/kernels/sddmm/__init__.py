@@ -1,2 +1,22 @@
 from repro.kernels.sddmm.ops import grouped_sddmm, sddmm_tile_size  # noqa: F401
 from repro.kernels.sddmm.ref import sddmm_ref  # noqa: F401
+from repro.kernels.contract import KernelContract, register
+
+# block-sampled dense-dense matmul (dL/dvalues backward product): same
+# square-tile rule as gmm -- one t <= 128, block-multiple, dividing m, k
+CONTRACT = register(KernelContract(
+    kernel="sddmm",
+    routes=("sddmm_grouped",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=128,
+    divisibility=(
+        "m % b == 0", "k % b == 0",
+        "any(t % b == 0 and m % t == 0 and k % t == 0 "
+        "for t in range(b, 129))",
+    ),
+    grid="tiles x 1: one program per pattern tile, t x t output block "
+         "sampled from dY @ X^T, t = sddmm_tile_size(m, k, b)",
+    capacity="exact",
+    pallas=True,
+))

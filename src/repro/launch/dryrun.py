@@ -21,13 +21,11 @@ Per cell this script:
      ``experiments/dryrun/``.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -117,7 +115,6 @@ def build_cell(name: str, shape: str, mesh, *, cfg=None,
 
     c_specs = rules.cache_specs(kw["caches"], mesh, batch=sh["batch"])
     ba = rules.batch_axes(mesh)
-    bspec = ba if sh["batch"] % mesh.size // mesh.shape["model"] == 0 else ()
     b_fit = (sh["batch"] % (mesh.size // mesh.shape["model"])) == 0
     bfirst = (ba if len(ba) > 1 else ba[0]) if (ba and b_fit) else None
     tok_spec = P(bfirst, None)

@@ -25,7 +25,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
 from repro.checkpoint import Checkpointer, latest_step, restore

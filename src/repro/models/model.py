@@ -21,7 +21,7 @@ Entry points map 1:1 onto the assigned shape cells:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import sparse as sparse_api
-from repro.models.layers import dense, dense_init
 from repro.sharding.rules import constrain
 
 

@@ -46,7 +46,6 @@ def _split_in(proj, cfg):
     s = cfg.ssm
     di = s.d_inner(cfg.d_model)
     g = s.n_groups
-    nh = s.num_heads(cfg.d_model)
     zs, xs, bs, cs, dts = jnp.split(
         proj, np.cumsum([di, di, g * s.d_state, g * s.d_state]), axis=-1)
     return zs, xs, bs, cs, dts
@@ -63,10 +62,10 @@ def _causal_conv(x, w, b):
 def _segsum(dA):
     """log-space cumulative decay matrix: out[i,j] = sum_{j<l<=i} dA[l],
     -inf above diagonal.  dA: [..., L] -> [..., L, L]."""
-    l = dA.shape[-1]
+    seq = dA.shape[-1]
     cs = jnp.cumsum(dA, axis=-1)
     diff = cs[..., :, None] - cs[..., None, :]
-    i = jnp.arange(l)
+    i = jnp.arange(seq)
     mask = i[:, None] >= i[None, :]
     return jnp.where(mask, diff, -jnp.inf)
 
@@ -78,14 +77,14 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int):
     """
     b_, s, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
-    l = min(chunk, s)
-    while s % l:
-        l //= 2
-    nc = s // l
+    lc = min(chunk, s)
+    while s % lc:
+        lc //= 2
+    nc = s // lc
     rep = h // g
 
     def cshape(t):  # [B,S,...] -> [B,nc,L,...]
-        return t.reshape(b_, nc, l, *t.shape[2:])
+        return t.reshape(b_, nc, lc, *t.shape[2:])
 
     xc, dtc = cshape(x), cshape(dt)
     Bc = jnp.repeat(cshape(B), rep, axis=3)          # [B,nc,L,H,N]

@@ -22,8 +22,11 @@ class AdamState(NamedTuple):
 
 def adamw_init(params) -> AdamState:
     # copy=True: fp32 leaves must not alias params (donation safety)
-    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return jnp.array(p, jnp.float32, copy=True)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamState(jnp.zeros((), jnp.int32),
                      jax.tree.map(f32, params),
                      jax.tree.map(zeros, params),

@@ -27,7 +27,6 @@ import re
 from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 

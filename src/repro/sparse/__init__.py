@@ -39,6 +39,7 @@ from repro.sparse.plan import (  # noqa: F401
     plan_report,
     record_dropped,
     reset,
+    reset_telemetry,
     spmm,
     spmm_nt,
     tp_report,

@@ -82,6 +82,36 @@ def reset(*, counters: bool = True):
     dispatch.clear_cache()
 
 
+def reset_telemetry():
+    """Zero the process-wide telemetry aggregates -- the running
+    ``capacity_report()`` counters and the ``plan_report()`` evolution
+    totals -- WITHOUT forgetting plans or verdicts (``reset()`` does
+    that).  Stats objects referenced by live cached plans are zeroed in
+    place (plans keep recording into them); orphaned registry entries
+    are dropped.  The test suite runs this between tests so telemetry
+    assertions never depend on execution order."""
+    with _plan_lock:
+        live = {id(p.capacity_stats) for p in _plan_cache.values()
+                if p.capacity_stats is not None}
+        for k in _evolution_totals:
+            _evolution_totals[k] = 0
+    with _capacity_lock:
+        for key in list(_capacity_registry):
+            stats = _capacity_registry[key]
+            if id(stats) not in live:
+                del _capacity_registry[key]
+                continue
+            with stats._lock:
+                stats.calls = 0
+                stats.overflow_calls = 0
+                stats.tiles_dropped_total = 0
+                stats.blocks_dropped_total = 0
+                stats.dropped_frac_sum = 0.0
+                stats.max_dropped_frac = 0.0
+                stats.last_tiles_total = 0
+                stats.last_tiles_dropped = 0
+
+
 def _capacity_stats_for(key: str, **kw) -> CapacityStats:
     with _capacity_lock:
         stats = _capacity_registry.get(key)
@@ -963,8 +993,8 @@ def _dense_executor(spec: OpSpec, route: str, ctx: PlanContext):
             rt = jnp.result_type(a.dtype, bb.dtype)
             if pallas:
                 from repro.kernels.dense_mm import ops as dmm_ops
-                f = lambda x_, y_: dmm_ops.dense_mm(x_, y_,
-                                                    interpret=interpret)
+                def f(x_, y_):
+                    return dmm_ops.dense_mm(x_, y_, interpret=interpret)
                 for _ in range(a.ndim - 2):
                     f = jax.vmap(f)
                 return f(a.astype(rt), bb.astype(rt))

@@ -8,7 +8,6 @@ lowers for every ``train_4k`` cell: params/opt-state shardings come from
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

@@ -41,3 +41,21 @@ def assert_close_for_dtype(got, want, dtype, label: str = ""):
     tol = grad_tol(dtype)
     assert err <= tol, (f"{label or 'array'} diverges: rel-max err "
                         f"{err:.2e} > {tol:.0e} budget for {dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Telemetry isolation: capacity_report()/plan_report() aggregate into
+# process-wide registries (deliberately -- the serving engine wants
+# lifetime totals), which made telemetry assertions order-dependent
+# across tests.  Zero the aggregates around every test; plans, verdicts
+# and disk caches survive (reset_telemetry never forgets decisions).
+# ---------------------------------------------------------------------------
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _reset_sparse_telemetry():
+    from repro import sparse
+    sparse.reset_telemetry()
+    yield

@@ -14,7 +14,6 @@ The tentpole invariants under test:
   replays (fwd + bwd) on a simulated restart with zero measurements;
 * a v4 (pre-evolution-schema) cache file is invalidated wholesale.
 """
-import dataclasses
 import json
 import os
 
@@ -206,8 +205,8 @@ def test_evolved_plan_jit_and_grad_safe():
     p2 = p.evolve(_move_one(mask))
     vals = p2.carry_values(bsr.values)
     rows, cols = p2.pattern
-    dense_ref = lambda v: BlockSparseMatrix(
-        v, rows, cols, (M, K), B).to_dense()
+    def dense_ref(v):
+        return BlockSparseMatrix(v, rows, cols, (M, K), B).to_dense()
 
     fwd = jax.jit(lambda v, xx: p2(v, xx))
     np.testing.assert_allclose(np.asarray(fwd(vals, x)),

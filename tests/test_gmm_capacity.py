@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro import sparse
-from repro.core import dynamic_sparse as dsp, masks, planner
+from repro.core import dynamic_sparse as dsp, planner
 from repro.core.bsr import BlockSparseMatrix
 from repro.kernels.gmm import ops as gmm_ops
 
@@ -309,7 +309,8 @@ def test_escalation_trip_persists_without_replan(tmp_path):
     """The serving scenario: the engine holds its plan and never calls
     plan() again -- the guardrail trip itself must write the escalated
     verdict to disk."""
-    import json, os
+    import json
+    import os
     bsr, op = _operand(33, d=1 / 16)
     x = jax.random.normal(jax.random.PRNGKey(34), (K, N))
     ctx = sparse.PlanContext(mode="dynamic_grouped", interpret=True,

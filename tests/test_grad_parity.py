@@ -9,7 +9,6 @@ plan-level ``custom_vjp`` makes trainable -- runs in the slow tier.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from conftest import assert_close_for_dtype
 

@@ -4,7 +4,6 @@ scanned programs (where XLA's visitor counts bodies once)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.analysis.hlo_cost import analyze_hlo_text, parse_hlo
 

@@ -7,21 +7,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import AbstractMesh
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.core import partitioner, tp
 from repro.core.bsr import BlockSparseMatrix
-from repro.models.model import LM
 from repro.sharding import rules
 
 NDEV = len(jax.devices())
 needs_mesh = pytest.mark.skipif(
     NDEV < 4, reason="needs >= 4 devices "
     "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-
-
-from jax.sharding import AbstractMesh
 
 
 @pytest.fixture(scope="module")

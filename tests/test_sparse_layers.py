@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import masks
 from repro.core.sparse_layers import (DynamicSparseLinear, SparseFFN,
                                       SparseLinear)
 

@@ -1,0 +1,1 @@
+"""Repo maintenance tools (bench gate, repro-lint, perf reports)."""

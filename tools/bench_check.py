@@ -42,7 +42,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 
 BASELINE_DIR = os.path.join(os.path.dirname(__file__), "..",
                             "benchmarks", "baselines")

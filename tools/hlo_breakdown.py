@@ -19,23 +19,29 @@ comps = hc.parse_hlo(text)
 an = hc.Analyzer(comps)
 
 # compute trip multiplier per computation by walking from entry
-import re, collections
+import collections
+import re
 entry = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE).group(1)
 mult = collections.defaultdict(float)
 def walk(name, k):
     comp = comps.get(name)
-    if comp is None: return
+    if comp is None:
+        return
     mult[name] += k
     for op in comp.ops:
         if op.opcode == 'while':
             m = re.search(r'known_trip_count[^0-9]*(\d+)', op.attrs)
             trip = int(m.group(1)) if m else 1
-            body = an._called(op.attrs, 'body'); cond = an._called(op.attrs, 'condition')
-            if body: walk(body, k*trip)
-            if cond: walk(cond, k*trip)
+            body = an._called(op.attrs, 'body')
+            cond = an._called(op.attrs, 'condition')
+            if body:
+                walk(body, k*trip)
+            if cond:
+                walk(cond, k*trip)
         elif op.opcode in ('call',):
             cal = an._called(op.attrs, 'to_apply')
-            if cal: walk(cal, k)
+            if cal:
+                walk(cal, k)
 walk(entry, 1.0)
 
 rows = []
@@ -53,7 +59,8 @@ for cname, k in mult.items():
         elif op.opcode in ('dynamic-slice','gather'):
             b = 2*res
         elif op.opcode == 'fusion':
-            callee_name = an._called(op.attrs, 'calls'); callee = comps.get(callee_name)
+            callee_name = an._called(op.attrs, 'calls')
+            callee = comps.get(callee_name)
             root = callee.ops[-1] if callee and callee.ops else None
             if root is not None and root.opcode in ('dynamic-update-slice','scatter'):
                 alias = max((hc._shape_bytes(an._operand_type(comp,o)) for o in op.operands), default=0)
@@ -63,10 +70,12 @@ for cname, k in mult.items():
         else:
             b = opnd+res
         f = 0.0
-        if op.opcode=='dot': f = an._dot_flops(comp, op)
+        if op.opcode=='dot':
+            f = an._dot_flops(comp, op)
         elif op.opcode=='fusion':
             cal = an._called(op.attrs,'calls')
-            if cal: f = an._flops_only(cal)
+            if cal:
+                f = an._flops_only(cal)
         rows.append((b*k, f*k, k, cname, op.opcode, op.name, op.type_str[:60]))
 
 rows.sort(reverse=True)

@@ -1,0 +1,9 @@
+"""repro-lint: repo-specific static analysis for the sparse-matmul stack.
+
+Run as ``PYTHONPATH=src python -m tools.lint [paths...]``.  The rule
+catalog, suppression syntax, and the kernel-contract checker are
+documented in docs/dev.md.
+"""
+from tools.lint.engine import (  # noqa: F401
+    FileContext, Finding, Rule, RepoRule, all_rules, lint_paths, register_rule,
+)

@@ -1,0 +1,74 @@
+"""CLI: ``PYTHONPATH=src python -m tools.lint [paths...]``.
+
+Default scope is ``src tools benchmarks`` (CI's blocking set; the
+nightly job adds ``tests``).  Exits nonzero when any finding survives
+suppression.  ``--json FILE`` additionally writes the findings as a
+JSON report (the nightly artifact); ``--update-baseline`` rewrites the
+R004 persisted-schema fingerprint, mirroring
+``tools/bench_check.py --update``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: repo-specific static analysis "
+                    "(rule catalog: docs/dev.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src tools "
+                         "benchmarks)")
+    ap.add_argument("--json", dest="json_out", metavar="FILE",
+                    help="also write findings as JSON")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite tools/lint/schema_baseline.json from "
+                         "the current spec.py/cache.py (commit the "
+                         "diff in the PR that bumps SCHEMA_VERSION)")
+    args = ap.parse_args(argv)
+
+    # the rules and the contract checker import repro
+    src = os.path.join(REPO_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+
+    from tools.lint import engine
+    from tools.lint import rules
+    from tools.lint import contracts  # noqa: F401 (registers C000)
+
+    if args.update_baseline:
+        fp = rules.compute_schema_fingerprint(REPO_ROOT)
+        with open(rules.BASELINE_PATH, "w") as f:
+            json.dump(fp, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"updated {os.path.relpath(rules.BASELINE_PATH, REPO_ROOT)} "
+              f"(schema_version={fp['schema_version']})")
+        return 0
+
+    paths = args.paths or ["src", "tools", "benchmarks"]
+    findings, files = engine.lint_paths(paths, repo_root=REPO_ROOT)
+
+    for fd in findings:
+        print(fd.format())
+    if args.json_out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.json_out)),
+                    exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump({"findings": [fd.to_json() for fd in findings],
+                       "files_checked": len(files)}, f, indent=1)
+        print(f"wrote {args.json_out}")
+    n = len(findings)
+    print(f"repro-lint: {len(files)} files checked, {n} finding"
+          f"{'' if n == 1 else 's'}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

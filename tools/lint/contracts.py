@@ -1,0 +1,177 @@
+"""Kernel contract checker: every dispatch route vs its declared
+CONTRACT vs the admissibility gates.
+
+Findings (all repo-level, anchored at core/dispatch.py):
+
+C001  route coverage     every route in ``dispatch.ROUTES`` +
+                         ``dispatch.SDDMM_ROUTES`` has exactly one
+                         registered contract, and no contract names a
+                         route outside that vocabulary
+C002  dtype coverage     every routed contract covers the authoritative
+                         ``dispatch.SUPPORTED_DTYPES`` vocabulary
+C003  admissibility      the gates (``_candidates`` /
+                         ``sddmm_candidates`` with allow_pallas=True)
+                         only offer routes whose contract admits the
+                         canonical block-divisible probe shapes; where a
+                         kernel ships a host-side validator
+                         (grouped_tile_size / sddmm_tile_size) the
+                         contract and the validator must agree on a
+                         probe grid that includes un-tileable shapes
+C004  declaration sanity the pallas flag matches the route family and
+                         the grid formula is documented
+
+Requires ``repro`` importable (run via ``PYTHONPATH=src``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from tools.lint.engine import FileContext, Finding, RepoRule, register_rule
+
+ANCHOR = "src/repro/core/dispatch.py"
+
+# canonical probe blocks (the paper's Table 3 block sizes); shapes per
+# block are m = 4b, k = 4b, n = 2b -- block-divisible by construction
+PROBE_BLOCKS = (4, 8, 16, 32, 64, 128)
+
+# (m, k, b) grid for validator agreement, including un-tileable shapes
+VALIDATOR_PROBES = (
+    (128, 128, 32), (96, 160, 32), (192, 320, 64), (512, 512, 128),
+    (100, 64, 32),      # m not a block multiple -> both must reject
+    (96, 100, 32),      # k not a block multiple -> both must reject
+    (132, 132, 33),     # t=33,66,99,132: 132%33==0 -> both must admit
+)
+
+
+def _validator_verdict(fn, m: int, k: int, b: int) -> Optional[str]:
+    """None if the host-side sizing validator accepts, else the reason."""
+    try:
+        fn(m, k, b)
+        return None
+    except ValueError as e:
+        return str(e)
+
+
+def check_contracts(*, registry: Optional[Dict] = None,
+                    routes: Optional[Sequence[str]] = None,
+                    sddmm_routes: Optional[Sequence[str]] = None
+                    ) -> List[Finding]:
+    """Cross-check contracts against the dispatch gates.  ``registry``/
+    ``routes``/``sddmm_routes`` default to the live ones; tests inject
+    deliberately broken registries here."""
+    from repro.core import dispatch
+    from repro.kernels import contract as contract_mod
+    from repro.kernels.gmm import ops as gmm_ops
+    from repro.kernels.sddmm import ops as sddmm_ops
+
+    if registry is None:
+        registry = contract_mod.load_all()
+    routes = tuple(dispatch.ROUTES if routes is None else routes)
+    sddmm_routes = tuple(dispatch.SDDMM_ROUTES if sddmm_routes is None
+                         else sddmm_routes)
+    vocabulary = set(routes) | set(sddmm_routes)
+    dtypes = dispatch.SUPPORTED_DTYPES
+    out: List[Finding] = []
+
+    # C001: route <-> contract bijection over the vocabulary
+    by_route: Dict[str, object] = {}
+    for c in registry.values():
+        for r in c.routes:
+            if r not in vocabulary:
+                out.append(Finding(
+                    "C001", ANCHOR, 1,
+                    f"contract {c.kernel!r} names unknown route {r!r}: "
+                    f"not in ROUTES + SDDMM_ROUTES {sorted(vocabulary)}"))
+                continue
+            if r in by_route:
+                out.append(Finding(
+                    "C001", ANCHOR, 1,
+                    f"route {r!r} claimed by both "
+                    f"{by_route[r].kernel!r} and {c.kernel!r}"))
+            by_route[r] = c
+    for r in routes + sddmm_routes:
+        if r not in by_route:
+            out.append(Finding(
+                "C001", ANCHOR, 1,
+                f"route {r!r} has no declared kernel CONTRACT "
+                f"(register one via repro.kernels.contract)"))
+
+    # C002: every routed contract covers the supported-dtype vocabulary
+    for r, c in sorted(by_route.items()):
+        missing = [d for d in dtypes if d not in c.dtypes]
+        if missing:
+            out.append(Finding(
+                "C002", ANCHOR, 1,
+                f"route {r!r} (contract {c.kernel!r}) does not cover "
+                f"supported dtypes {missing}"))
+
+    # C003a: the gates only offer routes whose contract admits the
+    # canonical block-divisible probes (a gate admitting shapes its
+    # kernel rejects is the statically-catchable crash)
+    ctx = dispatch.DispatchContext(differentiable=False, allow_pallas=True)
+    gated = set()
+    for kind in ("dense", "static", "dynamic"):
+        gated.update(dispatch._candidates(kind, ctx))
+    gated.update(dispatch.sddmm_candidates(ctx))
+    for r in sorted(gated & set(by_route)):
+        c = by_route[r]
+        for b in PROBE_BLOCKS:
+            if not (c.min_block <= b <= c.max_block):
+                continue
+            for dt in dtypes:
+                reason = c.admits(4 * b, 4 * b, 2 * b, b, dt)
+                if reason is not None:
+                    out.append(Finding(
+                        "C003", ANCHOR, 1,
+                        f"gate offers route {r!r} but contract "
+                        f"{c.kernel!r} rejects the canonical probe "
+                        f"m={4*b} k={4*b} n={2*b} b={b} {dt}: {reason}"))
+
+    # C003b: contract vs host-side sizing validator agreement
+    validators = {"dynamic_grouped": gmm_ops.grouped_tile_size,
+                  "sddmm_grouped": sddmm_ops.sddmm_tile_size}
+    for r, fn in sorted(validators.items()):
+        c = by_route.get(r)
+        if c is None:
+            continue
+        for m, k, b in VALIDATOR_PROBES:
+            cv = c.admits(m, k, 2 * b, b)
+            vv = _validator_verdict(fn, m, k, b)
+            if (cv is None) != (vv is None):
+                out.append(Finding(
+                    "C003", ANCHOR, 1,
+                    f"route {r!r}: contract {c.kernel!r} says "
+                    f"{cv or 'admit'} but {fn.__name__} says "
+                    f"{vv or 'admit'} for m={m} k={k} b={b}"))
+
+    # C004: pallas flag matches the route family; grid is documented
+    for r, c in sorted(by_route.items()):
+        needs_pallas = not (r.endswith("_xla") or r == "sddmm_dense")
+        if c.pallas != needs_pallas:
+            out.append(Finding(
+                "C004", ANCHOR, 1,
+                f"route {r!r}: contract {c.kernel!r} declares "
+                f"pallas={c.pallas} but the route "
+                f"{'requires' if needs_pallas else 'must not require'} "
+                f"a Pallas backend"))
+    for c in registry.values():
+        if not c.grid.strip():
+            out.append(Finding(
+                "C004", ANCHOR, 1,
+                f"contract {c.kernel!r} has an empty grid formula"))
+    return out
+
+
+@register_rule
+class KernelContractChecker(RepoRule):
+    id = "C000"
+    name = "kernel-contracts"
+    description = ("every dispatch route has a kernel CONTRACT that "
+                   "agrees with the admissibility gates")
+
+    def check_repo(self, files: Sequence[FileContext],
+                   repo_root: str) -> List[Finding]:
+        # only run when the dispatch layer is part of the lint scope
+        if not any(f.path == ANCHOR for f in files):
+            return []
+        return check_contracts()

@@ -1,0 +1,165 @@
+"""repro-lint core: findings, rule registry, suppressions, file walking.
+
+Two rule shapes:
+
+* :class:`Rule`      -- per-file; gets a :class:`FileContext` (source +
+                        AST) and returns findings for that file.
+* :class:`RepoRule`  -- whole-run; gets every collected file at once
+                        (cross-file invariants such as the persisted
+                        schema fingerprint).
+
+Suppressions (checked per finding, by rule id):
+
+* ``# repro-lint: disable=R001``            this line
+* ``# repro-lint: disable-next-line=R001``  the following line
+* ``# repro-lint: disable-file=R001``       whole file (first 20 lines)
+
+Multiple ids separate with commas: ``disable=R001,R005``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-next-line|disable-file)"
+    r"\s*=\s*([A-Z]\d+(?:\s*,\s*[A-Z]\d+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FileContext:
+    """One parsed source file: path (repo-relative, '/'-separated),
+    source text, split lines, AST, and the parsed suppression table."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self._line_disable: Dict[int, Set[str]] = {}
+        self._file_disable: Set[str] = set()
+        for i, text in enumerate(self.lines, 1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            kind, ids_text = m.group(1), m.group(2)
+            ids = {s.strip() for s in ids_text.split(",")}
+            if kind == "disable":
+                self._line_disable.setdefault(i, set()).update(ids)
+            elif kind == "disable-next-line":
+                self._line_disable.setdefault(i + 1, set()).update(ids)
+            elif kind == "disable-file" and i <= 20:
+                self._file_disable.update(ids)
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        if rule_id in self._file_disable:
+            return True
+        return rule_id in self._line_disable.get(line, set())
+
+
+class Rule:
+    """Per-file rule: subclass, set ``id``/``name``/``description``,
+    implement ``check``."""
+
+    id: str = ""
+    name: str = ""
+    description: str = ""
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        raise NotImplementedError
+
+
+class RepoRule(Rule):
+    """Whole-run rule: sees every collected file at once."""
+
+    def check_repo(self, files: Sequence[FileContext],
+                   repo_root: str) -> List[Finding]:
+        raise NotImplementedError
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        return []
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register_rule(cls):
+    """Class decorator: instantiate and register by rule id."""
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if inst.id in _RULES and type(_RULES[inst.id]) is not cls:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    _RULES[inst.id] = inst
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    return dict(_RULES)
+
+
+def iter_py_files(paths: Sequence[str], repo_root: str = ".") -> List[str]:
+    """Expand files/directories into a sorted repo-relative .py list."""
+    out = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(repo_root, p)
+        if os.path.isfile(full):
+            out.append(os.path.relpath(full, repo_root))
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for f in filenames:
+                if f.endswith(".py"):
+                    out.append(os.path.relpath(
+                        os.path.join(dirpath, f), repo_root))
+    return sorted(set(out))
+
+
+def lint_paths(paths: Sequence[str], *, repo_root: str = ".",
+               rules: Optional[Dict[str, Rule]] = None
+               ) -> Tuple[List[Finding], List[FileContext]]:
+    """Lint ``paths`` (files or directories) with ``rules`` (default:
+    every registered rule).  Returns (findings, file contexts); syntax
+    errors surface as E000 findings rather than crashing the run."""
+    rules = _RULES if rules is None else rules
+    files: List[FileContext] = []
+    findings: List[Finding] = []
+    for rel in iter_py_files(paths, repo_root):
+        try:
+            with open(os.path.join(repo_root, rel)) as f:
+                files.append(FileContext(rel, f.read()))
+        except SyntaxError as e:
+            findings.append(Finding("E000", rel.replace(os.sep, "/"),
+                                    e.lineno or 0, f"syntax error: {e.msg}"))
+    by_path = {fc.path: fc for fc in files}
+    for rule in rules.values():
+        raw: List[Finding] = []
+        if isinstance(rule, RepoRule):
+            raw = rule.check_repo(files, repo_root)
+        else:
+            for fc in files:
+                raw.extend(rule.check(fc))
+        for fd in raw:
+            fc = by_path.get(fd.path)
+            if fc is not None and fc.suppressed(fd.rule, fd.line):
+                continue
+            findings.append(fd)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, files
