@@ -57,6 +57,12 @@ CLAIMS = {
                          "reused, zero measurements) instead of a "
                          "from-scratch re-plan, and the evolved plan "
                          "keeps the static fwd+bwd win over dense",
+    "skewed_patterns": "load-balanced walks (PR 8): on row-skewed "
+                       "patterns (imbalance >= 2) the balanced routes "
+                       "beat the uniform walk >= 1.2x and win the plan "
+                       "race at the acceptance point; on uniform masks "
+                       "they never cost more than the 2% swizzle "
+                       "overhead (ratio >= 0.95)",
 }
 
 
@@ -171,6 +177,33 @@ def _check(fig, recs):
             f"{len(recs)} points; {len(wins)} evolved-plan wins at "
             f"d<=1/16 b>=16 (best {best['step_speedup_vs_dense']}x at "
             f"m={best['m']} b={best['b']} d={best['density']:.4f})")
+    if fig == "skewed_patterns":
+        # the PR 8 acceptance criterion: balanced routes beat the
+        # uniform walk >= 1.2x wherever imbalance >= 2 (both families),
+        # never lose more than the swizzle overhead on uniform masks,
+        # and actually WIN the race at a power-law point with m >= 4096,
+        # b = 16, d <= 1/16
+        skewed = [r for r in recs if r["imbalance"] >= 2.0]
+        uniform = [r for r in recs if r["mask"] == "uniform"]
+        wins = (bool(skewed)
+                and all(r["static_balance_ratio"] >= 1.2
+                        and r["dynamic_balance_ratio"] >= 1.2
+                        for r in skewed))
+        holds = all(r["static_balance_ratio"] >= 0.95
+                    and r["dynamic_balance_ratio"] >= 0.95
+                    for r in uniform)
+        acc = [r for r in skewed
+               if r["mask"] == "power_law" and r["m"] >= 4096
+               and r["b"] == 16 and r["density"] <= 1 / 16
+               and r["chosen"].endswith("balanced")]
+        best = max(recs, key=lambda r: r["static_balance_ratio"])
+        return wins and holds and bool(acc), (
+            f"{len(skewed)} skewed points all >= 1.2x, "
+            f"{len(uniform)} uniform points all >= 0.95x; race won by "
+            f"{acc[0]['chosen'] if acc else 'NOTHING'} at the "
+            f"acceptance point (best {best['static_balance_ratio']}x "
+            f"at mask={best['mask']} m={best['m']} b={best['b']} "
+            f"imbalance={best['imbalance']})")
     if fig == "tp_crossover":
         # deterministic side: analytic TP speedup grows with m per
         # (density, n) and crosses 1 somewhere on the grid; measured

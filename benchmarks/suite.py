@@ -542,6 +542,59 @@ def pattern_evolution(tiny: bool = False):
     return recs
 
 
+# -- skewed patterns: balanced-walk routes vs the uniform walk ----------------------------
+
+def skewed_patterns(tiny: bool = False):
+    """Row-skewed patterns (power-law / DLMC-style row profiles vs
+    uniform random) through the plan race: the uniform walks serialize
+    on hot rows, the PR 8 balanced routes (``static_balanced`` /
+    ``dynamic_grouped_balanced``) equalize per-lane work via the
+    row-swizzle pre-pass.  Each record carries the pattern's measured
+    ``(imbalance, cv)``, the winning route, and the deterministic
+    cost-model ratio of the uniform-walk route over its balanced
+    variant for both families -- >1 means the swizzle wins the race.
+    ``tiny=True`` is the CI smoke grid and includes the acceptance
+    point (m=4096, b=16, d=1/32 <= 1/16).
+    """
+    from repro import sparse
+    recs = []
+    ctx = sparse.PlanContext(allow_pallas=True, differentiable=False)
+    n = 4096
+    ms = (4096,) if tiny else (1024, 4096)
+    bs = (16,) if tiny else (4, 16)
+    ds = (1 / 32,) if tiny else (1 / 16, 1 / 32, 1 / 64)
+    gens = {"uniform": masks.random_block_mask,
+            "power_law": masks.power_law_block_mask,
+            "dlmc": masks.dlmc_block_mask}
+    for m in ms:
+        for b in bs:
+            for d in ds:
+                for kind, gen in gens.items():
+                    mask = gen(m, m, b, d, seed=0)
+                    bsr = BlockSparseMatrix.from_mask(mask, b,
+                                                      init="zeros")
+                    imb, cv = dispatch.pattern_balance(bsr)
+                    rep = sparse.plan(bsr, n, ctx=ctx).explain()
+                    cands = rep["candidates"]
+                    dyn_u = dispatch._estimate(
+                        "dynamic_grouped", m, m, n, b, d, "float32",
+                        imbalance=imb, cv=cv)
+                    dyn_b = dispatch._estimate(
+                        "dynamic_grouped_balanced", m, m, n, b, d,
+                        "float32", imbalance=imb, cv=cv)
+                    recs.append(dict(
+                        fig="skewed_patterns", mask=kind, m=m, b=b,
+                        density=d, n=n, imbalance=round(imb, 3),
+                        cv=round(cv, 3), chosen=rep["chosen"],
+                        static_balance_ratio=round(
+                            cands["static_pallas"]
+                            / cands["static_balanced"], 3),
+                        dynamic_balance_ratio=round(dyn_u / dyn_b, 3),
+                        candidates={r: round(s * 1e6, 3)
+                                    for r, s in cands.items()}))
+    return recs
+
+
 # -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
 
 def occupancy_study():
@@ -572,8 +625,9 @@ ALL = {
     "tp_crossover": tp_crossover,
     "train_grad": train_grad,
     "pattern_evolution": pattern_evolution,
+    "skewed_patterns": skewed_patterns,
 }
 
 # experiments with a reduced CI smoke grid (benchmarks.run --tiny)
 TINY_CAPABLE = ("dispatch", "grouped_capacity", "tp_crossover",
-                "train_grad", "pattern_evolution")
+                "train_grad", "pattern_evolution", "skewed_patterns")

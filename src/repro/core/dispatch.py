@@ -28,9 +28,12 @@ Routes (the execution strategies of Table 3, plus the TPU dense kernel):
     dense_pallas    kernels/dense_mm MXU-tiled kernel
     static_xla      static_sparse gather/einsum/segment-sum formulation
     static_pallas   kernels/bsmm tile-packed kernel (compile-time metadata)
+    static_balanced kernels/bsmm balanced walk (row-swizzle binned lanes)
     dynamic_xla     dynamic_sparse._dspmm scatter-add formulation
     dynamic_pallas  kernels/dsmm slot-walk kernel (runtime metadata)
     dynamic_grouped kernels/gmm device-side tile packing -> full-tile walk
+    dynamic_grouped_balanced
+                    kernels/gmm pack + row-swizzled slot visit order
 
 The decision is autotuned per *logical problem*, not per call: first the
 analytic TPU cost model (``benchmarks.cost_model``, the same one the
@@ -69,7 +72,8 @@ from repro.core import static_sparse as _ssp
 Operand = Union[jax.Array, np.ndarray, BlockSparseMatrix, DynamicOperand]
 
 ROUTES = ("dense_xla", "dense_pallas", "static_xla", "static_pallas",
-          "dynamic_xla", "dynamic_pallas", "dynamic_grouped")
+          "static_balanced", "dynamic_xla", "dynamic_pallas",
+          "dynamic_grouped", "dynamic_grouped_balanced")
 MODES = ("auto", "dense", "static", "dynamic") + ROUTES
 
 # backward-only route vocabulary: the dL/dvalues product of a static
@@ -205,9 +209,43 @@ def _ctx_fingerprint(ctx: DispatchContext) -> Tuple:
 
 
 def _cache_key(kind: str, m: int, k: int, n: int, b: int, density: float,
-               dtype, ctx: DispatchContext) -> Tuple:
-    return (kind, m, k, n, b, _density_bucket(density),
-            jnp.dtype(dtype).name) + _ctx_fingerprint(ctx)
+               dtype, ctx: DispatchContext,
+               skew: Tuple[float, float] = (1.0, 0.0)) -> Tuple:
+    """``skew`` is the pattern's (imbalance, cv) from
+    ``pattern_balance``: a skewed pattern's verdict (balanced route
+    wins) must not answer for a uniform one of the same shape/density.
+    Bucketed to one decimal so nnz jitter does not split the key."""
+    key = (kind, m, k, n, b, _density_bucket(density),
+           jnp.dtype(dtype).name) + _ctx_fingerprint(ctx)
+    imb, cv = (round(float(skew[0]), 1), round(float(skew[1]), 1))
+    if (imb, cv) != (1.0, 0.0):
+        key += ("skew", imb, cv)
+    return key
+
+
+def pattern_balance(operand) -> Tuple[float, float]:
+    """(imbalance, cv) of a static pattern's per-row-tile work at the
+    packed-walk granularity (``plan_packing`` row-tiles) -- the skew
+    signal the cost model prices the uniform walks with.  Runtime
+    (dynamic/dense) operands report (1.0, 0.0): their skew is only
+    knowable on device, so pricing stays profile-free."""
+    if not (isinstance(operand, BlockSparseMatrix) and operand.is_static):
+        return (1.0, 0.0)
+    from repro.core import partitioner as _partitioner
+    m, k = operand.shape
+    b = operand.block_size
+    # the packed walk's row-tile height (mirrors bsmm._pick_tiles)
+    tm = min(128, m) if m % 128 else 128
+    tm = max(b, tm - tm % b)
+    while m % tm:
+        tm //= 2
+    tm = max(tm, b)
+    rpb = max(1, tm // b)
+    rows = np.asarray(operand.row_idx, np.int64)
+    mt = max(1, m // tm)
+    counts = np.bincount(rows // rpb, minlength=mt)
+    rep = _partitioner.balance_report(counts)
+    return (rep["imbalance"], rep["cv"])
 
 
 # ---------------------------------------------------------------------------
@@ -249,16 +287,55 @@ def _roofline_fallback(route: str, m, k, n, b, density, bytes_el) -> float:
     return max(flops / peak, mem / bw)
 
 
+# balanced (row-swizzled) walks price as their parent's *un-skewed*
+# kernel time plus a small constant for the pad tiles / visit-schedule
+# bookkeeping; they never pay the skew factor -- equal-work lanes are
+# the point of the swizzle
+_BALANCED_PARENT = {"static_balanced": "static_pallas",
+                    "dynamic_grouped_balanced": "dynamic_grouped"}
+_BALANCED_OVERHEAD = 1.02
+
+# the uniform sparse walks serialize on hot rows: a run of same-row
+# steps pipelines its flush/init bubbles onto one lane (the row-swizzle
+# motivation of Gale et al. 2020), so their estimates scale with the
+# pattern's row imbalance.  Dense routes and the SDDMM family are
+# pattern-order-free and stay flat.
+_SKEW_SENSITIVE = ("static_xla", "static_pallas", "dynamic_xla",
+                   "dynamic_pallas", "dynamic_grouped")
+
+
+def _skew_factor(imbalance: float, cv: float) -> float:
+    # a uniform random mask carries Poisson sampling noise (imbalance
+    # ~1.2, cv ~0.1 at realistic sizes) that the walk absorbs for free;
+    # the dead zones keep that noise from flipping uniform verdicts
+    return min(3.0, 1.0 + 0.35 * max(0.0, imbalance - 1.25)
+               + 0.15 * max(0.0, cv - 0.25))
+
+
 def _estimate(route: str, m: int, k: int, n: int, b: int,
-              density: float, dtype) -> float:
+              density: float, dtype, *, imbalance: float = 1.0,
+              cv: float = 0.0) -> float:
     """Estimated seconds for one route on the TPU target.  XLA and Pallas
     variants of a family share the kernel-structure estimate; the XLA
     variant carries a small constant penalty so that on equal footing the
     purpose-built kernel wins (mirrors measured behaviour).
 
+    ``imbalance``/``cv`` (from ``pattern_balance`` /
+    ``partitioner.balance_report``) scale the uniform sparse walks by
+    ``_skew_factor``; the balanced routes price flat at their parent's
+    un-skewed time x ``_BALANCED_OVERHEAD``, so on skewed patterns the
+    race flips to the balanced variant and on uniform ones it never
+    does.
+
     SDDMM routes price the backward dL/dW product: a block-sampled
     ``dY[m, n] @ X[k, n]^T`` at block density ``d`` (the contraction is
     over ``n``, the sampled output is the ``[m, k]`` pattern grid)."""
+    parent = _BALANCED_PARENT.get(route)
+    if parent is not None:
+        return _estimate(parent, m, k, n, b, density,
+                         dtype) * _BALANCED_OVERHEAD
+    skew = (_skew_factor(imbalance, cv)
+            if route in _SKEW_SENSITIVE else 1.0)
     bytes_el = max(1, jnp.dtype(dtype).itemsize)
     fp32 = jnp.dtype(dtype).itemsize >= 4
     cm = _cost_model()
@@ -267,7 +344,7 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
                "sddmm_xla": "dynamic"}.get(route, route)
         t = _roofline_fallback(fam, m, k, n, b, density, bytes_el)
         return t * (4.0 if fp32 else 1.0) * \
-            (1.15 if route.endswith("_xla") else 1.0)
+            (1.15 if route.endswith("_xla") else 1.0) * skew
     db = cm.B32 if fp32 else cm.B16
     if route in SDDMM_ROUTES:
         if route == "sddmm_dense":
@@ -332,7 +409,7 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
                          true_density=density, dtype_bytes=db)
     if fp32:
         t = cm.fp32_time(t)
-    return t.seconds * (1.15 if route.endswith("_xla") else 1.0)
+    return t.seconds * (1.15 if route.endswith("_xla") else 1.0) * skew
 
 
 # ---------------------------------------------------------------------------
@@ -392,11 +469,16 @@ def _candidates(kind: str, ctx: DispatchContext) -> Tuple[str, ...]:
         cands.append(f"{f}_xla")
         if _pallas_ok(ctx):
             cands.append(f"{f}_pallas")
+            if f == "static":
+                # row-swizzled walk (kernels/bsmm balanced): same
+                # operand constraints as static_pallas
+                cands.append("static_balanced")
             if f == "dynamic":
                 # device-side tile packing (kernels/gmm) -- runs the
                 # full-tile Pallas walk, so it is gated like the other
-                # Pallas routes
+                # Pallas routes -- plus its row-swizzled visit order
                 cands.append("dynamic_grouped")
+                cands.append("dynamic_grouped_balanced")
     return tuple(cands)
 
 
@@ -425,7 +507,11 @@ def _run_route(route: str, operand: Operand, x: jax.Array,
     if route == "static_pallas":
         from repro.kernels.bsmm import ops as bsmm_ops
         return bsmm_ops.bsmm(operand, x, interpret=ctx.interpret)
-    if route in ("dynamic_xla", "dynamic_pallas", "dynamic_grouped"):
+    if route == "static_balanced":
+        from repro.kernels.bsmm import ops as bsmm_ops
+        return bsmm_ops.bsmm_balanced(operand, x, interpret=ctx.interpret)
+    if route in ("dynamic_xla", "dynamic_pallas", "dynamic_grouped",
+                 "dynamic_grouped_balanced"):
         op = operand
         if isinstance(op, BlockSparseMatrix):   # device-resident indices
             op = DynamicOperand(
@@ -437,7 +523,7 @@ def _run_route(route: str, operand: Operand, x: jax.Array,
             mb = op.shape[0] // op.block_size
             return _dspmm(op.values, op.row_idx, op.col_idx, x, mb,
                           op.block_size)
-        if route == "dynamic_grouped":
+        if route in ("dynamic_grouped", "dynamic_grouped_balanced"):
             # execute at the planned bucket (same sizing _estimate
             # prices), so measured autotune wall-clocks the capacity the
             # plan layer will actually allocate -- not the worst case
@@ -449,6 +535,10 @@ def _run_route(route: str, operand: Operand, x: jax.Array,
             d_ = op.capacity / max(1, (m_ // b_) * (k_ // b_))
             cap = _planner.plan_grouped_capacity(
                 m_, k_, b_, d_, tile=t, slots=op.capacity).tiles_cap
+            if route == "dynamic_grouped_balanced":
+                from repro.kernels.gmm import balanced as gmm_balanced
+                return gmm_balanced.balanced_spmm(
+                    op, x, tile=t, tiles_cap=cap, interpret=ctx.interpret)
             return gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=cap,
                                         interpret=ctx.interpret)
         from repro.kernels.dsmm import ops as dsmm_ops
@@ -522,7 +612,9 @@ def decide(operand: Operand, n: int, *,
     ctx = ctx or current_ctx()
     kind, m, k, b, density = _normalize(operand)
     dtype = _dtype_of(operand)
-    key = _cache_key(kind, m, k, n, b, density, dtype, ctx)
+    imb, cv = pattern_balance(operand)
+    key = _cache_key(kind, m, k, n, b, density, dtype, ctx,
+                     skew=(imb, cv))
     if ctx.cache:
         hit = _decision_cache.get(key)
         if hit is not None:
@@ -530,9 +622,11 @@ def decide(operand: Operand, n: int, *,
     cands = _candidates(kind, ctx)
     if len(cands) == 1:
         dec = Decision(cands[0], {cands[0]: _estimate(
-            cands[0], m, k, n, b, density, dtype)}, "forced", key)
+            cands[0], m, k, n, b, density, dtype, imbalance=imb,
+            cv=cv)}, "forced", key)
     else:
-        est = {r: _estimate(r, m, k, n, b, density, dtype) for r in cands}
+        est = {r: _estimate(r, m, k, n, b, density, dtype,
+                            imbalance=imb, cv=cv) for r in cands}
         source = "analytic"
         pick_from = est
         if ctx.measure and x is not None and _is_concrete(
@@ -622,7 +716,9 @@ def explain(operand: Operand, n: int, *,
     ctx = ctx or current_ctx()
     kind, m, k, b, density = _normalize(operand)
     dtype = _dtype_of(operand)
-    key = _cache_key(kind, m, k, n, b, density, dtype, ctx)
+    imb, cv = pattern_balance(operand)
+    key = _cache_key(kind, m, k, n, b, density, dtype, ctx,
+                     skew=(imb, cv))
     cached = _decision_cache.get(key)
     dec = cached or decide(operand, n,
                            ctx=dataclasses.replace(ctx, cache=False))
@@ -630,6 +726,7 @@ def explain(operand: Operand, n: int, *,
         "problem": {"kind": kind, "m": m, "k": k, "n": n, "block_size": b,
                     "density": round(density, 5),
                     "density_bucket": _density_bucket(density),
+                    "imbalance": round(imb, 3), "cv": round(cv, 3),
                     "dtype": jnp.dtype(dtype).name},
         "mode": ctx.mode,
         "pallas_admissible": _pallas_ok(ctx),

@@ -26,10 +26,13 @@ def random_block_mask(m: int, k: int, b: int, density: float, *,
     """
     mb, kb = _grid(m, k, b)
     total = mb * kb
-    nnz = max(1, int(round(density * total)))
+    # density=0.0 means *empty*, not "at least one block"
+    nnz = 0 if density == 0.0 else max(1, int(round(density * total)))
     nnz = min(nnz, total)
     rng = np.random.default_rng(seed)
     mask = np.zeros((mb, kb), bool)
+    if nnz == 0:
+        return mask
     if not clustered:
         flat = rng.choice(total, size=nnz, replace=False)
         mask.flat[flat] = True
@@ -49,12 +52,93 @@ def random_block_mask(m: int, k: int, b: int, density: float, *,
         placed += sub.size
         if placed >= nnz:
             break
-    # trim overshoot deterministically
-    extra = mask.sum() - nnz
+    # trim overshoot with the seeded rng: clearing the highest-index set
+    # bits would systematically deplete bottom-right tiles
+    extra = int(mask.sum()) - nnz
     if extra > 0:
         on = np.flatnonzero(mask)
-        mask.flat[on[-extra:]] = False
+        mask.flat[rng.choice(on, size=extra, replace=False)] = False
     return mask
+
+
+def _rows_from_profile(weights: np.ndarray, nnz: int, kb: int,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Allocate ``nnz`` blocks over rows proportionally to ``weights``
+    (largest-remainder rounding, per-row cap ``kb``)."""
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    ideal = w * nnz
+    counts = np.floor(ideal).astype(np.int64)
+    counts = np.minimum(counts, kb)
+    rem = nnz - int(counts.sum())
+    # hand out the remainder by largest fractional part, skipping rows
+    # already at the kb cap (shuffle first so ties break by the rng)
+    order = rng.permutation(len(w))
+    order = order[np.argsort(-(ideal - np.floor(ideal))[order],
+                             kind="stable")]
+    for r in order:
+        if rem <= 0:
+            break
+        if counts[r] < kb:
+            counts[r] += 1
+            rem -= 1
+    while rem > 0:       # every high-remainder row capped: spill anywhere
+        for r in order:
+            if rem <= 0:
+                break
+            if counts[r] < kb:
+                counts[r] += 1
+                rem -= 1
+    return counts
+
+
+def _mask_from_row_counts(counts: np.ndarray, mb: int, kb: int,
+                          rng: np.random.Generator) -> np.ndarray:
+    mask = np.zeros((mb, kb), bool)
+    for r in range(mb):
+        c = int(counts[r])
+        if c > 0:
+            mask[r, rng.choice(kb, size=c, replace=False)] = True
+    return mask
+
+
+def power_law_block_mask(m: int, k: int, b: int, density: float, *,
+                         alpha: float = 1.2, seed: int = 0) -> np.ndarray:
+    """Skewed block mask with a power-law row profile (row ``i`` gets
+    weight ``(i+1)^-alpha``, rows shuffled).  This is the realistic-DL
+    regime of Gale et al. 2020 (arxiv 2006.10901): a few hot rows hold
+    most of the nnz, so uniform tile walks serialize on them -- the
+    pattern family the row-swizzle pre-pass exists for."""
+    mb, kb = _grid(m, k, b)
+    total = mb * kb
+    nnz = 0 if density == 0.0 else max(1, int(round(density * total)))
+    nnz = min(nnz, total)
+    rng = np.random.default_rng(seed)
+    if nnz == 0:
+        return np.zeros((mb, kb), bool)
+    weights = (np.arange(1, mb + 1, dtype=np.float64)) ** -alpha
+    weights = weights[rng.permutation(mb)]
+    counts = _rows_from_profile(weights, nnz, kb, rng)
+    return _mask_from_row_counts(counts, mb, kb, rng)
+
+
+def dlmc_block_mask(m: int, k: int, b: int, density: float, *,
+                    sigma: float = 1.0, seed: int = 0) -> np.ndarray:
+    """DLMC-style row-profile sampling: per-row nnz drawn from a
+    lognormal profile (Gale et al.'s Deep Learning Matrix Collection
+    shows pruned-transformer rows are heavy-tailed, not uniform).
+    ``sigma`` controls the spread; ``sigma=0`` degenerates to uniform
+    rows."""
+    mb, kb = _grid(m, k, b)
+    total = mb * kb
+    nnz = 0 if density == 0.0 else max(1, int(round(density * total)))
+    nnz = min(nnz, total)
+    rng = np.random.default_rng(seed)
+    if nnz == 0:
+        return np.zeros((mb, kb), bool)
+    weights = rng.lognormal(mean=0.0, sigma=sigma, size=mb)
+    counts = _rows_from_profile(weights, nnz, kb, rng)
+    return _mask_from_row_counts(counts, mb, kb, rng)
 
 
 def banded_block_mask(m: int, k: int, b: int, bandwidth_blocks: int) -> np.ndarray:

@@ -151,6 +151,116 @@ def pack_values(plan: PackingPlan, values) -> jax.Array:
     return tiles.reshape(plan.num_tiles, plan.tm, plan.tk)
 
 
+@dataclasses.dataclass(frozen=True)
+class SwizzlePlan:
+    """Row-swizzle pre-pass (Gale et al. 2020 §5.1, row binning): assign
+    row-tiles to ``num_bins`` equal-work bins by sorted-snake dealing
+    over their tile counts, so a balanced kernel grid can walk one bin
+    per (parallel) grid lane with near-equal steps per lane.
+
+    ``order`` is the swizzled visit order (bins concatenated, row-tiles
+    ascending within a bin); ``inverse`` is its inverse permutation --
+    the balanced kernels fold it into the output index map (each step
+    writes its *original* row-tile), so no runtime un-permute runs.
+    """
+
+    order: np.ndarray       # [R] row-tiles in visit order
+    inverse: np.ndarray     # [R] inverse permutation of ``order``
+    bin_of: np.ndarray      # [R] owning bin per row-tile
+    num_bins: int
+    steps_per_bin: int      # max per-bin tile count (the padded lane length)
+    loads: np.ndarray       # [num_bins] tile count per bin
+
+
+def plan_swizzle(row_counts: np.ndarray,
+                 num_bins: int | None = None) -> SwizzlePlan:
+    """Bin row-tiles so per-bin work (tile counts) is equalized.
+
+    Sorted-snake dealing: sort rows by count descending, deal them into
+    bins boustrophedon (0..B-1, B-1..0, ...).  For power-law row
+    profiles this bounds the max-bin load close to the mean -- the
+    row-swizzle load balance of Gale et al. without any runtime cost.
+    """
+    counts = np.asarray(row_counts, np.int64)
+    r = int(counts.size)
+    nb = min(int(num_bins) if num_bins else 8, max(r, 1))
+    nb = max(nb, 1)
+    order_desc = np.argsort(-counts, kind="stable")
+    bin_of = np.zeros(r, np.int32)
+    for i, row in enumerate(order_desc):
+        pos, rnd = i % nb, i // nb
+        bin_of[row] = pos if rnd % 2 == 0 else nb - 1 - pos
+    loads = np.bincount(bin_of, weights=counts,
+                        minlength=nb).astype(np.int64)
+    order = np.lexsort((np.arange(r), bin_of))
+    inverse = np.argsort(order)
+    steps = int(loads.max()) if r else 0
+    return SwizzlePlan(order.astype(np.int64), inverse.astype(np.int64),
+                       bin_of, nb, steps, loads)
+
+
+@dataclasses.dataclass(frozen=True)
+class BalancedPacking:
+    """Swizzle-composed tile packing (plan-first contract): the base
+    row-major ``PackingPlan`` (``pack_values`` layout is unchanged) plus
+    the per-bin visit schedule the balanced kernels prefetch.
+
+    ``visit_slot[g, s]`` is the tile-stack slot bin ``g`` multiplies at
+    step ``s`` -- or ``base.num_tiles``, the appended all-zero pad tile,
+    once the bin's real work is exhausted.  Pad steps keep the bin's
+    last real row so the walk's flush fires once, at the lane end.
+    ``visit_rows`` carries *original* row-tile ids: the inverse swizzle
+    permutation is applied to the output by construction.
+    """
+
+    base: PackingPlan
+    swizzle: SwizzlePlan
+    visit_slot: np.ndarray   # [num_bins, steps] int32
+    visit_rows: np.ndarray   # [num_bins, steps] int32 (original row-tiles)
+    visit_cols: np.ndarray   # [num_bins, steps] int32
+
+    @property
+    def num_bins(self) -> int:
+        return int(self.visit_slot.shape[0])
+
+    @property
+    def steps_per_bin(self) -> int:
+        return int(self.visit_slot.shape[1])
+
+
+def plan_packing_balanced(row_idx: np.ndarray, col_idx: np.ndarray,
+                          shape: Tuple[int, int], block_size: int,
+                          tm: int = 128, tk: int = 128,
+                          num_bins: int | None = None) -> BalancedPacking:
+    """Pattern phase of the balanced (row-swizzled) packing: the base
+    ``plan_packing`` metadata plus the snake-binned visit schedule.
+    Host-only, runs once per pattern."""
+    base = plan_packing(row_idx, col_idx, shape, block_size, tm, tk)
+    mt = base.grid[0]
+    counts = np.bincount(base.tile_rows, minlength=mt)
+    sw = plan_swizzle(counts, num_bins)
+    nb, steps = sw.num_bins, sw.steps_per_bin
+    # base.tile_rows is sorted row-major: each row-tile's slots are one
+    # contiguous range
+    starts = np.searchsorted(base.tile_rows, np.arange(mt), side="left")
+    ends = np.searchsorted(base.tile_rows, np.arange(mt), side="right")
+    visit_slot = np.full((nb, steps), base.num_tiles, np.int32)  # pad tile
+    visit_rows = np.zeros((nb, steps), np.int32)
+    visit_cols = np.zeros((nb, steps), np.int32)
+    for g in range(nb):
+        rows_g = np.flatnonzero(sw.bin_of == g)
+        slots = np.concatenate([np.arange(starts[r], ends[r])
+                                for r in rows_g]) if rows_g.size else \
+            np.zeros(0, np.int64)
+        t = slots.size
+        visit_slot[g, :t] = slots
+        visit_rows[g, :t] = base.tile_rows[slots]
+        visit_cols[g, :t] = base.tile_cols[slots]
+        if t:                      # pad keeps the lane's last real row
+            visit_rows[g, t:] = visit_rows[g, t - 1]
+    return BalancedPacking(base, sw, visit_slot, visit_rows, visit_cols)
+
+
 def pack_tiles(bsr: BlockSparseMatrix, tm: int = 128, tk: int = 128) -> TilePacking:
     """Pack a static BSR matrix into MXU-aligned dense tiles.
 
@@ -223,15 +333,29 @@ def balanced_k_splits(block_mask: np.ndarray, q: int) -> np.ndarray:
         raise ValueError(f"q={q} partitions > {kb} block columns")
     total = int(col_nnz.sum())
     prefix = np.concatenate([[0], np.cumsum(col_nnz)])
-    # target nnz per partition; walk boundaries greedily on the prefix sum
+    # target nnz per partition; walk boundaries greedily on the prefix
+    # sum.  A boundary that lands on a *plateau* of the prefix (a run of
+    # empty columns) is free to slide anywhere on the plateau without
+    # changing any shard's nnz -- slide it toward the even-split
+    # position so empty columns spread across shards instead of piling
+    # every zero column (plus forced 1-column slivers) onto the last
+    # shards when the mass sits in a prefix/suffix of the columns.
     boundaries = [0]
     for p in range(1, q):
         target = total * p / q
-        # smallest boundary with prefix >= target, but leave room for the
-        # remaining partitions (each needs >= 1 column)
-        j = int(np.searchsorted(prefix, target, side="left"))
+        e = int(round(kb * p / q))           # even-split position
+        jlo = int(np.searchsorted(prefix, target, side="left"))
+        jhi = jlo
+        while jhi + 1 <= kb and prefix[jhi + 1] == prefix[jlo]:
+            jhi += 1
+        j = min(max(e, jlo), jhi)
+        # leave room for the remaining partitions (each needs >= 1 col)
         j = max(j, boundaries[-1] + 1)
-        j = min(j, kb - (q - p))
+        hi = kb - (q - p)
+        if j > hi:
+            # forced clamp: whatever we ceded is empty column tail --
+            # fall back toward the even position rather than hugging hi
+            j = max(boundaries[-1] + 1, min(hi, e))
         boundaries.append(j)
     boundaries.append(kb)
     return np.asarray(boundaries, np.int64)
@@ -428,11 +552,15 @@ def balance_report(counts: np.ndarray) -> dict:
     if counts.size == 0:
         # degenerate pattern (no owners): a zeroed report, not a crash
         return {"max": 0, "min": 0, "mean": 0.0, "imbalance": 0.0,
-                "padding_waste": 0.0}
+                "padding_waste": 0.0, "frac_empty": 0.0, "cv": 0.0}
     mx, mn, mean = counts.max(), counts.min(), counts.mean()
     return {
         "max": int(mx), "min": int(mn), "mean": float(mean),
+        # max/mean alone hides all-empty owners (min=0 still reports a
+        # finite ratio): frac_empty + cv surface that skew honestly
         "imbalance": float(mx / mean) if mean else 0.0,
         "padding_waste": float((mx * len(counts) - counts.sum())
                                / max(1, counts.sum())),
+        "frac_empty": float((counts == 0).mean()),
+        "cv": float(counts.std() / mean) if mean else 0.0,
     }

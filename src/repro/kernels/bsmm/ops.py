@@ -4,8 +4,10 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.bsr import BlockSparseMatrix
-from repro.core.partitioner import (PackingPlan, TilePacking, pack_tiles,
-                                    pack_values)
+from repro.core.partitioner import (BalancedPacking, PackingPlan,
+                                    TilePacking, pack_tiles, pack_values,
+                                    plan_packing_balanced)
+from repro.kernels.bsmm.balanced import bsmm_balanced_call
 from repro.kernels.bsmm.bsmm import bsmm_call
 
 
@@ -54,6 +56,44 @@ def bsmm_from_plan(meta: PackingPlan, values, x, *, tn: int | None = None,
                      jnp.asarray(meta.tile_cols), tiles, x,
                      tm=meta.tm, tk=meta.tk, tn=tn,
                      grid_m=meta.grid[0], interpret=interpret)
+
+
+def bsmm_balanced_from_plan(meta: BalancedPacking, values, x, *,
+                            tn: int | None = None,
+                            interpret: bool = False):
+    """SpMM from a one-time ``partitioner.plan_packing_balanced``
+    analysis (the ``static_balanced`` route's plan-execute path): the
+    row-swizzled visit schedule is a baked host constant; per call only
+    the value relayout (``pack_values``, identical to the uniform
+    route's) plus the appended zero pad tile run."""
+    base = meta.base
+    m, k = base.shape
+    n = x.shape[-1]
+    tn = tn or _pick_tiles(m, k, n, base.tk)[2]
+    tiles = pack_values(base, values)
+    tiles = jnp.concatenate(
+        [tiles, jnp.zeros((1, base.tm, base.tk), tiles.dtype)])
+    return bsmm_balanced_call(jnp.asarray(meta.visit_rows),
+                              jnp.asarray(meta.visit_cols),
+                              jnp.asarray(meta.visit_slot), tiles, x,
+                              tm=base.tm, tk=base.tk, tn=tn,
+                              grid_m=base.grid[0], interpret=interpret)
+
+
+def bsmm_balanced(bsr: BlockSparseMatrix, x, *, tm: int | None = None,
+                  tk: int | None = None, tn: int | None = None,
+                  num_bins: int | None = None, interpret: bool = False):
+    """One-shot convenience: balanced plan + multiply.  ``x: [k, n]``."""
+    if not bsr.is_static:
+        raise ValueError("bsmm_balanced requires a static pattern")
+    m, k = bsr.shape
+    n = x.shape[-1]
+    atm, atk, atn = _pick_tiles(m, k, n, bsr.block_size)
+    meta = plan_packing_balanced(bsr.row_idx, bsr.col_idx, bsr.shape,
+                                 bsr.block_size, tm or atm, tk or atk,
+                                 num_bins=num_bins)
+    return bsmm_balanced_from_plan(meta, bsr.values, x, tn=tn or atn,
+                                   interpret=interpret)
 
 
 def bsmm(bsr: BlockSparseMatrix, x, *, tm: int | None = None,

@@ -21,3 +21,23 @@ CONTRACT = register(KernelContract(
     capacity="planned_bucket",
     pallas=True,
 ))
+
+# row-swizzled slot order over the same planned-bucket pack: the pack,
+# capacity semantics and overflow accounting are shared with gmm; only
+# the (device-computed) slot visit order differs
+BALANCED_CONTRACT = register(KernelContract(
+    kernel="gmm_balanced",
+    routes=("dynamic_grouped_balanced",),
+    dtypes=("float32", "bfloat16", "float16"),
+    min_block=1,
+    max_block=128,
+    divisibility=(
+        "m % b == 0", "k % b == 0",
+        "any(t % b == 0 and m % t == 0 and k % t == 0 "
+        "for t in range(b, 129))",
+    ),
+    grid="tiles_cap x (n // tn): planned-capacity walk over packed "
+         "t x t tiles in snake-binned (bin, row) order",
+    capacity="planned_bucket",
+    pallas=True,
+))

@@ -50,7 +50,13 @@ import jax
 # verdict) written by MatmulPlan.evolve -- an evolved pattern's record
 # documents that its route verdicts were *inherited*, not raced, so the
 # drift guardrail survives a restart; v4 files are invalidated wholesale
-SCHEMA_VERSION = 5
+# v6: the route vocabulary grew the balanced-walk pair "static_balanced"
+# / "dynamic_grouped_balanced" and plan fingerprints grew the pattern's
+# bucketed skew (imbalance, cv) -- a v5 verdict was raced without the
+# balanced candidates and keyed blind to skew, so it could answer a
+# skewed pattern with the uniform walk; v5 files are invalidated
+# wholesale
+SCHEMA_VERSION = 6
 
 _lock = threading.RLock()
 _configured_dir: Optional[str] = None

@@ -511,11 +511,15 @@ def _selection_ctx(spec: OpSpec, ctx: PlanContext) -> dispatch.DispatchContext:
     return dctx
 
 
-def _fingerprint(spec: OpSpec, ctx: PlanContext) -> tuple:
+def _fingerprint(spec: OpSpec, ctx: PlanContext, operand=None) -> tuple:
     dctx = ctx.dispatch_ctx()
+    # skew rides in the base key (dispatch.pattern_balance, bucketed):
+    # a skewed pattern's verdict -- the balanced route winning -- must
+    # not answer for a uniform pattern of the same shape/density
     base = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
                                spec.block_size, spec.density, spec.dtype,
-                               dctx)
+                               dctx,
+                               skew=dispatch.pattern_balance(operand))
     q = ctx.resolved_tp_q()
     # a TP verdict is a property of the mesh it was raced on: axis names
     # + sizes are part of the key (a verdict measured on a 1x8 mesh must
@@ -655,7 +659,7 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
     persisted by ``plan()`` (one store, after the executor -- and its
     capacity and grad sections -- are built)."""
     dctx = _selection_ctx(spec, ctx)
-    key = cache_lib.key_string(_fingerprint(spec, ctx))
+    key = cache_lib.key_string(_fingerprint(spec, ctx, operand))
     use_disk = ctx.cache and ctx.persistence_on()
     if use_disk:
         rec = cache_lib.load_decision(ctx.resolved_cache_dir(), key)
@@ -704,7 +708,8 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
     if operand is not None:
         dkey = dispatch._cache_key(spec.kind, spec.m, spec.k, spec.n,
                                    spec.block_size, spec.density,
-                                   spec.dtype, dctx)
+                                   spec.dtype, dctx,
+                                   skew=dispatch.pattern_balance(operand))
         already = dkey in dispatch._decision_cache
         dec = dispatch.decide(operand, spec.n, ctx=dctx, x=x)
         if dec.source == "measured" and not already:
@@ -845,6 +850,21 @@ def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
         return (lambda v, x: bsmm_ops.bsmm_from_plan(
             meta, v, x, interpret=interpret)), art
 
+    if route == "static_balanced":
+        from repro.kernels.bsmm import ops as bsmm_ops
+        tm, tk, _ = bsmm_ops._pick_tiles(m, k, spec.n, b)
+        meta = partitioner.plan_packing_balanced(rows, cols, (m, k), b,
+                                                 tm, tk)
+        bal = partitioner.balance_report(meta.swizzle.loads)
+        art.update(packing_tiles=meta.base.num_tiles,
+                   packing_occupancy=meta.base.occupancy,
+                   swizzle_bins=meta.num_bins,
+                   swizzle_steps_per_bin=meta.steps_per_bin,
+                   swizzle_imbalance=bal["imbalance"],
+                   swizzle_cv=bal["cv"])
+        return (lambda v, x: bsmm_ops.bsmm_balanced_from_plan(
+            meta, v, x, interpret=interpret)), art
+
     if route in ("dense_xla", "dense_pallas"):
         rows_j, cols_j = jnp.asarray(rows), jnp.asarray(cols)
         pallas = route == "dense_pallas"
@@ -856,7 +876,8 @@ def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
             return _promote_matmul(w, x, pallas=pallas, interpret=interpret)
         return run, art
 
-    if route in ("dynamic_xla", "dynamic_pallas", "dynamic_grouped"):
+    if route in ("dynamic_xla", "dynamic_pallas", "dynamic_grouped",
+                 "dynamic_grouped_balanced"):
         rows_d = jnp.asarray(rows, jnp.int32)
         cols_d = jnp.asarray(cols, jnp.int32)
         nnz = jnp.asarray(len(rows), jnp.int32)
@@ -867,13 +888,18 @@ def _static_executor(spec: OpSpec, route: str, ctx: PlanContext,
         def as_dyn(v):
             return DynamicOperand(jnp.asarray(v), rows_d, cols_d, nnz,
                                   (m, k), b)
-        if route == "dynamic_grouped":
+        if route in ("dynamic_grouped", "dynamic_grouped_balanced"):
             from repro.kernels.gmm import ops as gmm_ops
             t = gmm_ops.grouped_tile_size(m, k, b)
             # static pattern -> the exact tile count is known at plan time
             meta = partitioner.plan_packing(rows, cols, (m, k), b, t, t)
             cap = meta.num_tiles
             art.update(grouped_tile=t, grouped_tiles_cap=cap)
+            if route == "dynamic_grouped_balanced":
+                from repro.kernels.gmm import balanced as gmm_balanced
+                return (lambda v, x: gmm_balanced.balanced_spmm(
+                    as_dyn(v), x, tile=t, tiles_cap=cap,
+                    interpret=interpret)), art
             return (lambda v, x: gmm_ops.grouped_spmm(
                 as_dyn(v), x, tile=t, tiles_cap=cap,
                 interpret=interpret)), art
@@ -920,8 +946,12 @@ def _dynamic_executor(spec: OpSpec, route: str, ctx: PlanContext,
         from repro.kernels.dsmm import ops as dsmm_ops
         return (lambda op, x: dsmm_ops.dsmm(op, x,
                                             interpret=interpret)), art
-    if route == "dynamic_grouped":
+    if route in ("dynamic_grouped", "dynamic_grouped_balanced"):
         from repro.kernels.gmm import ops as gmm_ops
+        if route == "dynamic_grouped_balanced":
+            from repro.kernels.gmm.balanced import balanced_spmm as _gspmm
+        else:
+            _gspmm = gmm_ops.grouped_spmm
         t = gmm_ops.grouped_tile_size(m, k, b)
         # planned capacity (paper §3.3 bucket sizing): expected distinct
         # tiles at d_max, times the headroom knob -- NOT the safe worst
@@ -961,12 +991,10 @@ def _dynamic_executor(spec: OpSpec, route: str, ctx: PlanContext,
 
         def run(op, x):
             if not telemetry:        # skip the accounting reductions
-                return gmm_ops.grouped_spmm(op, x, tile=t,
-                                            tiles_cap=cap,
-                                            interpret=interpret)
-            y, st = gmm_ops.grouped_spmm(op, x, tile=t, tiles_cap=cap,
-                                         interpret=interpret,
-                                         return_stats=True)
+                return _gspmm(op, x, tile=t, tiles_cap=cap,
+                              interpret=interpret)
+            y, st = _gspmm(op, x, tile=t, tiles_cap=cap,
+                           interpret=interpret, return_stats=True)
             _record_pack_stats(stats, st)
             return y
         return run, art
@@ -1277,8 +1305,9 @@ def _no_vjp_error(execute, route: str, workaround: str):
     return run
 
 
-_PALLAS_FWD_ONLY = ("dense_pallas", "static_pallas", "dynamic_pallas",
-                    "dynamic_grouped")
+_PALLAS_FWD_ONLY = ("dense_pallas", "static_pallas", "static_balanced",
+                    "dynamic_pallas", "dynamic_grouped",
+                    "dynamic_grouped_balanced")
 
 
 def _wrap_grad(spec: OpSpec, route: str, ctx: PlanContext,
@@ -1498,7 +1527,7 @@ def _evolve_plan(parent: "MatmulPlan", new_bsr: BlockSparseMatrix,
     # verdict-reuse path: rebuild the executor (the cheap host pattern
     # phases only) and replay the parent's route + backward verdicts --
     # zero decisions, zero measurements
-    fp = _fingerprint(new_spec, ctx)
+    fp = _fingerprint(new_spec, ctx, new_bsr)
     key_str = cache_lib.key_string(fp)
     execute, artifacts = _static_executor(new_spec, parent.route, ctx,
                                           new_bsr)
@@ -1627,7 +1656,7 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
         spec = OpSpec.from_operand(operand, n, mode=ctx.mode)
 
     pkey = pattern_key(operand) if operand is not None else None
-    fp = _fingerprint(spec, ctx)
+    fp = _fingerprint(spec, ctx, operand)
     # the persistence policy and the runtime-only knobs are part of the
     # in-memory plan-cache identity but not the disk fingerprint -- see
     # _mem_key / _fingerprint

@@ -74,6 +74,41 @@ def test_balanced_beats_even_on_skewed_pattern():
     assert max(loads_bal) < max(loads_even)
 
 
+def test_balanced_splits_power_law_columns_no_worse_than_even():
+    """PR 8 regression: on power-law column mass the nnz-balanced walk
+    must not report worse shard imbalance than fixed even splits (the
+    old greedy emitted forced 1-column sliver shards)."""
+    kb, q = 64, 8
+    mask = np.zeros((64, kb), bool)
+    for j in range(kb):
+        c = max(1, int(64 * (j + 1) ** -1.2))
+        mask[:c, j] = True
+    col_nnz = mask.sum(0)
+
+    def loads(bounds):
+        return np.array([col_nnz[a:z].sum() for a, z in
+                         zip(bounds[:-1], bounds[1:])])
+
+    rep_bal = partitioner.balance_report(
+        loads(partitioner.balanced_k_splits(mask, q)))
+    rep_even = partitioner.balance_report(
+        loads(partitioner.even_k_splits(kb, q)))
+    assert rep_bal["imbalance"] <= rep_even["imbalance"] + 1e-9
+
+
+@pytest.mark.parametrize("where", ["prefix", "suffix"])
+def test_balanced_splits_spread_empty_columns(where):
+    """Degenerate skew: all nnz in a zero-column suffix/prefix used to
+    force 1-column sliver shards; empty columns must now spread evenly
+    across shards instead."""
+    kb, q = 8, 4
+    mask = np.zeros((4, kb), bool)
+    mask[:, -1 if where == "prefix" else 0] = True
+    bounds = partitioner.balanced_k_splits(mask, q)
+    widths = np.diff(bounds)
+    assert widths.max() - widths.min() <= 1      # near-even widths
+
+
 @pytest.mark.parametrize(
     "seed,q", _sweep(2, 9, list(range(51)), [2, 4, 8]))
 def test_shard_blocks_partition_of_blocks(seed, q):

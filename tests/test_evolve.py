@@ -297,7 +297,7 @@ def test_duplicate_blocks_rejected_everywhere():
 def test_balance_report_empty_counts():
     rep = partitioner.balance_report(np.array([], np.int64))
     assert rep == {"max": 0, "min": 0, "mean": 0.0, "imbalance": 0.0,
-                   "padding_waste": 0.0}
+                   "padding_waste": 0.0, "frac_empty": 0.0, "cv": 0.0}
 
 
 # -- persistence ------------------------------------------------------------------------

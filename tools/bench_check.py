@@ -33,6 +33,11 @@ noise -- so a 15% tolerance is a real gate, not flake insurance:
                         boolean "evolve stayed cheap"), and the evolve
                         chain's decision/measurement event count folded
                         into the gated route string (must stay ``ev0``).
+* ``skewed_patterns``   per-family cost-model advantage of the balanced
+                        walk over the uniform walk, plus the winning
+                        route at each skew point (a skew crossover that
+                        stops picking the balanced variant flips the
+                        route gate).
 
 A config present in the baseline but missing from the current run (or
 vice versa) fails: a silently shrunk grid is a coverage regression.
@@ -102,12 +107,28 @@ def _pattern_evolution_ratios(recs):
     return out
 
 
+def _skewed_ratios(recs):
+    # two gated ratios per grid point: the deterministic cost-model
+    # advantage of the balanced walk over the uniform walk for each
+    # family; the chosen route rides the static entry -- a skew
+    # crossover that stops picking the balanced variant is exactly the
+    # regression this gate exists to catch
+    out = {}
+    for r in recs:
+        k = _key(r, ("mask", "m", "b", "density", "n"))
+        out[f"{k}|static"] = {"ratio": r["static_balance_ratio"],
+                              "route": r["chosen"]}
+        out[f"{k}|dynamic"] = {"ratio": r["dynamic_balance_ratio"]}
+    return out
+
+
 EXTRACTORS = {
     "dispatch": _dispatch_ratios,
     "grouped_capacity": _capacity_ratios,
     "tp_crossover": _tp_ratios,
     "train_grad": _train_grad_ratios,
     "pattern_evolution": _pattern_evolution_ratios,
+    "skewed_patterns": _skewed_ratios,
 }
 
 # runner-dependent fields stripped from baselines on --update, so a
@@ -124,6 +145,7 @@ STRIP_FIELDS = {
     # raw evolve/re-plan timings are runner wall-clock; the gate reads
     # only the capped replan_vs_evolve ratio
     "pattern_evolution": ("evolve_ms", "replan_ms"),
+    "skewed_patterns": (),     # all fields are deterministic model outputs
 }
 
 
