@@ -20,6 +20,19 @@ from benchmarks import bench_walltime, suite  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
+# per-figure artifact names for --all-tiny / --all-full: the files
+# tools/bench_check.py diffs against benchmarks/baselines/ and CI
+# uploads under the bench-* artifact pattern.  Adding a benchmark to
+# the smoke job = adding it to suite.TINY_CAPABLE (+ a baseline).
+FIG_FILES = {
+    "dispatch": "BENCH_dispatch.json",
+    "grouped_capacity": "BENCH_grouped_capacity.json",
+    "tp_crossover": "BENCH_tp.json",
+    "train_grad": "BENCH_train_grad.json",
+    "pattern_evolution": "BENCH_pattern_evolution.json",
+    "skewed_patterns": "BENCH_skewed_patterns.json",
+}
+
 CLAIMS = {
     "table3": "paper Table 3: static > dynamic at every (b, dtype); "
               "speedup grows with b; fp32 ratios exceed fp16",
@@ -242,20 +255,33 @@ def main():
     ap.add_argument("--out", default=None,
                     help="also write the records to this JSON path "
                          "(e.g. BENCH_dispatch.json for the CI artifact)")
+    ap.add_argument("--all-tiny", action="store_true",
+                    help="run every TINY_CAPABLE experiment on its smoke "
+                         "grid and write one BENCH_*.json per figure to "
+                         "--out-dir (the CI benchmark-smoke entry point)")
+    ap.add_argument("--all-full", action="store_true",
+                    help="like --all-tiny but on the full grids (nightly)")
+    ap.add_argument("--out-dir", default=OUT,
+                    help="directory for the per-figure BENCH_*.json files "
+                         "written by --all-tiny / --all-full")
     args = ap.parse_args()
 
     all_recs = {}
-    for fig, fn in suite.ALL.items():
-        if args.only and fig != args.only:
-            continue
-        if args.tiny and fig in suite.TINY_CAPABLE:
-            all_recs[fig] = fn(tiny=True)
-        else:
-            all_recs[fig] = fn()
-    if not args.only and not args.skip_walltime:
-        all_recs["cpu_walltime"] = bench_walltime.run()
-    elif args.only == "cpu_walltime":
-        all_recs["cpu_walltime"] = bench_walltime.run()
+    if args.all_tiny or args.all_full:
+        for fig in suite.TINY_CAPABLE:
+            all_recs[fig] = suite.ALL[fig](tiny=bool(args.all_tiny))
+    else:
+        for fig, fn in suite.ALL.items():
+            if args.only and fig != args.only:
+                continue
+            if args.tiny and fig in suite.TINY_CAPABLE:
+                all_recs[fig] = fn(tiny=True)
+            else:
+                all_recs[fig] = fn()
+        if not args.only and not args.skip_walltime:
+            all_recs["cpu_walltime"] = bench_walltime.run()
+        elif args.only == "cpu_walltime":
+            all_recs["cpu_walltime"] = bench_walltime.run()
 
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "results.json"), "w") as f:
@@ -264,6 +290,17 @@ def main():
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(all_recs, f, indent=1)
+    if args.all_tiny or args.all_full:
+        # one file per figure, named exactly like the committed baseline
+        # it gates against, so `tools/bench_check.py <out-dir>/BENCH_*`
+        # works unmodified
+        os.makedirs(args.out_dir, exist_ok=True)
+        for fig, recs in all_recs.items():
+            path = os.path.join(args.out_dir,
+                                FIG_FILES.get(fig, f"BENCH_{fig}.json"))
+            with open(path, "w") as f:
+                json.dump({fig: recs}, f, indent=1)
+            print(f"wrote {path}")
 
     failures = 0
     for fig, recs in all_recs.items():

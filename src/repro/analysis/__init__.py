@@ -1,2 +1,4 @@
-from repro.analysis.hlo_cost import analyze_hlo_text  # noqa: F401
-from repro.analysis.roofline import roofline_terms, V5E  # noqa: F401
+from repro.analysis.hlo_cost import (  # noqa: F401
+    analyze_hlo_text, sddmm_cost_dict, spmm_cost_dict)
+from repro.analysis.roofline import (  # noqa: F401
+    roofline_terms, route_efficiency, V5E)

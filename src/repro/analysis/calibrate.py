@@ -1,0 +1,357 @@
+"""Fit the dispatch cost-model coefficients from the benchmark corpus.
+
+``dispatch._estimate_raw`` prices each route from first principles
+(MXU/bandwidth cycles, the grouped-capacity ``tiles_cap`` bucket, the
+skew knee).  This module closes the loop against measurements: it
+replays every (route, shape, time) observation in the committed
+``benchmarks/baselines/BENCH_*.json`` corpus — plus any locally
+produced bench JSONs — through the *uncalibrated* model and fits a
+per-route affine correction
+
+    t_cal = scale[route] * t_raw + fixed_us[route]
+
+by ordinary least squares (median-ratio scale-only when a route has too
+few observations for a stable intercept), plus the ``_skew_factor``
+slopes from the skew-annotated records.  The result is written to
+``benchmarks/baselines/cost_coeffs.json``; ``dispatch`` loads it at
+import and mixes its content digest into every decision cache key and
+plan fingerprint, so a refit invalidates stale verdicts like a schema
+bump.
+
+Design constraints, in order:
+
+* **Tie stability.**  The corpus contains exact route ties
+  (``static_pallas == dense_pallas`` on pallas-off grids) whose
+  resolution is dict-insertion order.  Fitted corrections within noise
+  of identity are snapped *to* identity (``SCALE_SNAP`` /
+  ``FIXED_SNAP_US``) so calibration never perturbs an exact tie into a
+  spurious crossover.
+* **Idempotence.**  The fit always runs against the identity model
+  (``_identity_model`` swaps it in), never against the currently
+  installed coefficients — refitting from an unchanged corpus emits a
+  byte-identical file.
+* **Determinism.**  No RNG, no wall clock: the corpus is the only
+  input, so `calibrate --update` is reproducible in CI (and repro-lint
+  R005 has nothing to suppress here).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.calibrate            # dry run
+    PYTHONPATH=src python -m repro.analysis.calibrate --update   # (re)fit
+    PYTHONPATH=src python -m repro.analysis.calibrate \
+        --corpus benchmarks/out/BENCH_*.json --report fit.json
+
+A refreshed ``cost_coeffs.json`` is a baseline re-sign: CI requires the
+literal string ``re-sign`` in the commit/PR title (see docs/dev.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import glob
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dispatch
+
+BASELINE_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "benchmarks", "baselines"))
+DEFAULT_OUT = os.path.join(BASELINE_DIR, "cost_coeffs.json")
+
+COEFFS_VERSION = 1
+
+# fit guard rails: a corpus glitch must not produce a model that
+# reorders every race
+SCALE_BOUNDS = (0.25, 4.0)
+FIXED_BOUNDS_US = (0.0, 100.0)
+SLOPE_BOUNDS = (0.0, 2.0)
+# snap-to-identity tolerances (see module docstring: tie stability)
+SCALE_SNAP = 0.02
+FIXED_SNAP_US = 1.0
+SLOPE_SNAP_REL = 0.05
+MIN_AFFINE_OBS = 3          # fewer -> median-ratio scale, no intercept
+MIN_SPREAD_REL = 0.05       # x-range below this -> intercept unidentifiable
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """One (route, shape) -> measured-microseconds corpus point."""
+
+    fig: str
+    route: str
+    m: int
+    k: int
+    n: int
+    b: int
+    density: float
+    dtype: str = "float32"
+    imbalance: float = 1.0
+    cv: float = 0.0
+    measured_us: float = 0.0
+    source: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Corpus extraction (one extractor per benchmark figure)
+# ---------------------------------------------------------------------------
+
+_KNOWN_ROUTES = frozenset(dispatch.ROUTES) | frozenset(dispatch.SDDMM_ROUTES)
+
+
+def _candidate_obs(rec: dict, fig: str, source: str, *,
+                   imbalance: float = 1.0, cv: float = 0.0,
+                   ) -> List[Observation]:
+    out = []
+    m = int(rec["m"])
+    for route, us in (rec.get("candidates") or {}).items():
+        if route not in _KNOWN_ROUTES:
+            continue
+        out.append(Observation(
+            fig=fig, route=route, m=m, k=m, n=int(rec["n"]),
+            b=int(rec["b"]), density=float(rec["density"]),
+            imbalance=imbalance, cv=cv,
+            measured_us=float(us), source=source))
+    return out
+
+
+def _extract_dispatch(rec: dict, source: str) -> List[Observation]:
+    return _candidate_obs(rec, "dispatch", source)
+
+
+def _extract_skewed(rec: dict, source: str) -> List[Observation]:
+    return _candidate_obs(
+        rec, "skewed_patterns", source,
+        imbalance=float(rec.get("imbalance", 1.0)),
+        cv=float(rec.get("cv", 0.0)))
+
+
+def _extract_train_grad(rec: dict, source: str) -> List[Observation]:
+    # fwd and dx are SpMM over the (k=m) square patterns; dv is the
+    # block SDDMM.  The dense baseline inside the record is derived,
+    # not measured, so only the three routed legs become observations.
+    out = []
+    m = int(rec["m"])
+    for leg in ("fwd", "dx", "dv"):
+        route = rec.get(f"{leg}_route")
+        us = rec.get(f"{leg}_us")
+        if route in _KNOWN_ROUTES and us is not None:
+            out.append(Observation(
+                fig="train_grad", route=route, m=m, k=m,
+                n=int(rec["n"]), b=int(rec["b"]),
+                density=float(rec["density"]),
+                measured_us=float(us), source=source))
+    return out
+
+
+# grouped_capacity records carry no time fields and tp records price
+# through _tp_estimate (a different code path) -- both are excluded
+EXTRACTORS = {
+    "dispatch": _extract_dispatch,
+    "skewed_patterns": _extract_skewed,
+    "train_grad": _extract_train_grad,
+}
+
+
+def load_corpus(paths: Optional[Sequence[str]] = None,
+                ) -> List[Observation]:
+    """Observations from the committed baselines plus ``paths`` extras.
+
+    Each file is either ``{fig: [records]}`` (the baseline format) or a
+    bare record list (``benchmarks/run.py`` local output); records from
+    figures without an extractor are ignored.
+    """
+    files = sorted(glob.glob(os.path.join(BASELINE_DIR, "BENCH_*.json")))
+    for p in paths or ():
+        hits = sorted(glob.glob(p))
+        if not hits:
+            raise FileNotFoundError(f"corpus glob matched nothing: {p}")
+        files.extend(hits)
+    obs: List[Observation] = []
+    for path in files:
+        with open(path) as f:
+            blob = json.load(f)
+        groups = (blob.items() if isinstance(blob, dict)
+                  else [(None, blob)])
+        src = os.path.basename(path)
+        for fig, recs in groups:
+            for rec in recs:
+                extract = EXTRACTORS.get(fig or rec.get("fig", ""))
+                if extract is not None:
+                    obs.extend(extract(rec, src))
+    return obs
+
+
+# ---------------------------------------------------------------------------
+# Fitting
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def _identity_model():
+    """Evaluate ``_estimate_raw`` under the hand-tuned constants so a
+    refit never compounds on the previously fitted coefficients."""
+    prev = dispatch.cost_coeffs()
+    dispatch.set_cost_coeffs(dispatch.IDENTITY_COEFFS)
+    try:
+        yield
+    finally:
+        dispatch.set_cost_coeffs(prev)
+
+
+def _raw_us(o: Observation, *, skewless: bool = False) -> float:
+    imb, cv = (1.0, 0.0) if skewless else (o.imbalance, o.cv)
+    return dispatch._estimate_raw(
+        o.route, o.m, o.k, o.n, o.b, o.density, o.dtype,
+        imbalance=imb, cv=cv) * 1e6
+
+
+def _snap(value: float, target: float, tol: float) -> float:
+    return target if abs(value - target) <= tol else value
+
+
+def _fit_route(xs: np.ndarray, ys: np.ndarray) -> Tuple[float, float]:
+    """(scale, fixed_us) for one route: OLS when the corpus identifies
+    an intercept, median-ratio scale otherwise."""
+    spread = (xs.max() - xs.min()) / max(xs.mean(), 1e-12)
+    if len(xs) >= MIN_AFFINE_OBS and spread >= MIN_SPREAD_REL:
+        scale, fixed = np.polyfit(xs, ys, 1)
+        if not (FIXED_BOUNDS_US[0] <= fixed <= FIXED_BOUNDS_US[1]):
+            # negative / absurd intercept: refit through the origin
+            scale, fixed = float(np.median(ys / xs)), 0.0
+    else:
+        scale, fixed = float(np.median(ys / xs)), 0.0
+    scale = float(np.clip(scale, *SCALE_BOUNDS))
+    fixed = float(np.clip(fixed, *FIXED_BOUNDS_US))
+    return (_snap(scale, 1.0, SCALE_SNAP), _snap(fixed, 0.0, FIXED_SNAP_US))
+
+
+def _fit_skew(obs: List[Observation],
+              routes: Dict[str, dict]) -> Dict[str, float]:
+    """Least-squares ``_skew_factor`` slopes from the skew-annotated
+    observations (knees and cap stay at their hand-tuned values: the
+    corpus does not sample the near-knee region densely enough to
+    identify them).  Cap-censored points are excluded."""
+    d = dispatch.IDENTITY_COEFFS
+    skew = {"imb_knee": d.skew_imb_knee, "imb_slope": d.skew_imb_slope,
+            "cv_knee": d.skew_cv_knee, "cv_slope": d.skew_cv_slope,
+            "cap": d.skew_cap}
+    rows, rhs = [], []
+    for o in obs:
+        if o.route not in dispatch._SKEW_SENSITIVE:
+            continue
+        x_imb = max(0.0, o.imbalance - skew["imb_knee"])
+        x_cv = max(0.0, o.cv - skew["cv_knee"])
+        if x_imb <= 0.0 and x_cv <= 0.0:
+            continue
+        c = routes.get(o.route, {})
+        base = (c.get("scale", 1.0) * _raw_us(o, skewless=True)
+                + c.get("fixed_us", 0.0))
+        implied = o.measured_us / max(base, 1e-9)
+        if implied >= skew["cap"] - 1e-6:     # censored at the cap
+            continue
+        rows.append([x_imb, x_cv])
+        rhs.append(implied - 1.0)
+    if len(rows) >= 2:
+        A, y = np.asarray(rows), np.asarray(rhs)
+        if np.linalg.matrix_rank(A) == 2:
+            s_imb, s_cv = np.linalg.lstsq(A, y, rcond=None)[0]
+            s_imb = float(np.clip(s_imb, *SLOPE_BOUNDS))
+            s_cv = float(np.clip(s_cv, *SLOPE_BOUNDS))
+            skew["imb_slope"] = _snap(
+                s_imb, d.skew_imb_slope, SLOPE_SNAP_REL * d.skew_imb_slope)
+            skew["cv_slope"] = _snap(
+                s_cv, d.skew_cv_slope, SLOPE_SNAP_REL * d.skew_cv_slope)
+    return skew
+
+
+def fit(obs: List[Observation]) -> dict:
+    """The full fit: per-route affine terms, then skew slopes, plus a
+    per-route error report.  Returns the ``cost_coeffs.json`` blob."""
+    if not obs:
+        raise ValueError("empty corpus: nothing to fit")
+    with _identity_model():
+        by_route: Dict[str, List[Tuple[float, float]]] = {}
+        for o in obs:
+            by_route.setdefault(o.route, []).append(
+                (_raw_us(o), o.measured_us))
+        routes: Dict[str, dict] = {}
+        all_rel: List[float] = []
+        for route in sorted(by_route):
+            pts = np.asarray(by_route[route], dtype=np.float64)
+            scale, fixed = _fit_route(pts[:, 0], pts[:, 1])
+            pred = scale * pts[:, 0] + fixed
+            rel = np.abs(pred - pts[:, 1]) / np.maximum(pts[:, 1], 1e-9)
+            all_rel.extend(rel.tolist())
+            routes[route] = {
+                "scale": round(scale, 6), "fixed_us": round(fixed, 6),
+                "n_obs": int(len(pts)),
+                "median_rel_err": round(float(np.median(rel)), 6),
+            }
+        skew = {k: round(v, 6)
+                for k, v in _fit_skew(obs, routes).items()}
+    digest = dispatch.coeffs_digest(routes, skew, COEFFS_VERSION)
+    return {
+        "version": COEFFS_VERSION,
+        "digest": digest,
+        "corpus": {
+            "files": sorted({o.source for o in obs}),
+            "n_obs": len(obs),
+            "n_routes": len(routes),
+        },
+        "routes": routes,
+        "skew": skew,
+        "fit_median_rel_err": round(float(np.median(all_rel)), 6),
+    }
+
+
+def write_coeffs(blob: dict, out: str = DEFAULT_OUT) -> str:
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fit dispatch cost coefficients from the bench corpus")
+    ap.add_argument("--corpus", nargs="*", default=None, metavar="GLOB",
+                    help="extra bench JSONs beyond benchmarks/baselines/")
+    ap.add_argument("--update", action="store_true",
+                    help=f"write {os.path.relpath(DEFAULT_OUT)}")
+    ap.add_argument("--out", default=None,
+                    help="write the fitted coefficients to this path")
+    ap.add_argument("--report", default=None,
+                    help="write the full fit blob (with diagnostics) here")
+    args = ap.parse_args(argv)
+
+    obs = load_corpus(args.corpus)
+    blob = fit(obs)
+    print(f"calibrate: {blob['corpus']['n_obs']} observations from "
+          f"{len(blob['corpus']['files'])} files, "
+          f"{blob['corpus']['n_routes']} routes, "
+          f"fit median rel err {blob['fit_median_rel_err']:.4%}")
+    for route, c in blob["routes"].items():
+        print(f"  {route:28s} scale={c['scale']:<8g} "
+              f"fixed_us={c['fixed_us']:<8g} n={c['n_obs']:<3d} "
+              f"err={c['median_rel_err']:.4%}")
+    print(f"  skew: {blob['skew']}  digest={blob['digest']}")
+    out = args.out or (DEFAULT_OUT if args.update else None)
+    if out:
+        print(f"calibrate: wrote {write_coeffs(blob, out)}")
+    else:
+        print("calibrate: dry run (pass --update to write)")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(blob, f, indent=1, sort_keys=True)
+        print(f"calibrate: report -> {args.report}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -447,3 +447,36 @@ def analyze_hlo_text(text: str, *, vmem_dims=None) -> dict:
                 collective_bytes=c.collective_bytes,
                 collectives=c.collectives, warnings=an.warnings,
                 num_computations=len(comps))
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost dicts (no HLO required) -- roofline inputs for routes
+# whose module we never compile on the planning path
+# ---------------------------------------------------------------------------
+
+def spmm_cost_dict(m: int, k: int, n: int, *, density: float = 1.0,
+                   bytes_el: int = 2) -> dict:
+    """Useful work of ``sparse[m, k] @ dense[k, n]`` at block density
+    ``density``: the lower bound a perfect kernel would hit -- zero
+    blocks never touched, dense operand and output streamed once.
+    Shaped like an :func:`analyze_hlo_text` result so it feeds
+    ``roofline.roofline_terms`` / ``route_efficiency`` directly."""
+    d = min(max(float(density), 0.0), 1.0)
+    return dict(
+        flops=2.0 * m * k * n * d,
+        bytes=(m * k * d + k * n + m * n) * float(bytes_el),
+        collective_bytes=0.0,
+        collectives={}, warnings=[])
+
+
+def sddmm_cost_dict(m: int, k: int, n: int, *, density: float = 1.0,
+                    bytes_el: int = 2) -> dict:
+    """Useful work of the block-sampled ``dY[m, n] @ X[k, n]^T``
+    (backward dL/dvalues): only the sampled ``[m, k]`` pattern blocks
+    are computed and written, both dense factors are read once."""
+    d = min(max(float(density), 0.0), 1.0)
+    return dict(
+        flops=2.0 * m * k * n * d,
+        bytes=(m * n + k * n + m * k * d) * float(bytes_el),
+        collective_bytes=0.0,
+        collectives={}, warnings=[])

@@ -14,6 +14,16 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 def load_records(mesh: str | None = None, tag: str = ""):
+    """Dry-run records matching ``mesh``/``tag``.  A missing records
+    directory raises (an empty table used to silently hide a wrong
+    path or an un-run dry-run step); an existing-but-unmatched dir
+    returns [] -- that is a real "no records yet" answer."""
+    dryrun = os.path.normpath(DRYRUN_DIR)
+    if not os.path.isdir(dryrun):
+        raise FileNotFoundError(
+            f"dry-run records directory does not exist: {dryrun} -- "
+            f"generate records first (see experiments/dryrun in "
+            f"EXPERIMENTS.md) or check the working tree layout")
     recs = []
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*{tag}.json"))):
         base = os.path.basename(path)[:-5]

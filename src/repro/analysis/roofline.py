@@ -43,6 +43,31 @@ def roofline_terms(cost: dict, hw: HwSpec = V5E, *, model_flops_per_device:
     return out
 
 
+def route_efficiency(est_seconds: float, cost: dict, hw: HwSpec = V5E, *,
+                     flag_headroom: float = 2.0) -> dict:
+    """How close a route's (estimated or measured) time sits to its
+    roofline bound for the work in ``cost`` (an analyzer-style dict:
+    flops / bytes / collective_bytes).
+
+    ``efficiency`` is bound/achieved in (0, 1]; ``headroom`` its
+    reciprocal.  ``flagged`` marks routes leaving more than
+    ``flag_headroom``x on the table -- the kernel-work signal the
+    sparsity-roofline paper argues for (a route at 4x headroom is a
+    kernel to fix, not a shape to avoid)."""
+    bound = roofline_terms(cost, hw)
+    achieved = max(float(est_seconds), 1e-12)
+    eff = min(1.0, bound["bound_seconds"] / achieved)
+    headroom = achieved / max(bound["bound_seconds"], 1e-12)
+    return {
+        "achieved_seconds": achieved,
+        "bound_seconds": bound["bound_seconds"],
+        "dominant": bound["dominant"],
+        "efficiency": eff,
+        "headroom": headroom,
+        "flagged": headroom > flag_headroom,
+    }
+
+
 def model_flops_train(n_active_params: int, tokens: int) -> float:
     """6·N·D for a train step (fwd 2ND + bwd 4ND)."""
     return 6.0 * n_active_params * tokens

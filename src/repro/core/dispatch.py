@@ -56,7 +56,10 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
+import json
 import math
+import os
 import threading
 import time
 from typing import Dict, Optional, Tuple, Union
@@ -165,6 +168,118 @@ def _pallas_ok(ctx: DispatchContext) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Calibrated cost coefficients (fitted by repro.analysis.calibrate)
+# ---------------------------------------------------------------------------
+
+_COEFFS_ENV = "REPRO_COST_COEFFS"
+_COEFFS_DEFAULT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "benchmarks", "baselines", "cost_coeffs.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCoeffs:
+    """Corrections to the hand-tuned analytic model, fitted from the
+    committed benchmark corpus by ``repro.analysis.calibrate``.
+
+    ``_estimate`` prices a route as ``scale[route] * t_raw +
+    fixed_us[route]`` over the hand-tuned kernel-structure time
+    ``t_raw`` (``_estimate_raw``); the skew knee/slope/cap fields
+    replace the ``_skew_factor`` constants.  ``digest`` -- a content
+    hash of the fitted values -- joins every decision cache key and
+    (through ``_cache_key``) every plan fingerprint, so a coefficient
+    refit invalidates stale verdicts exactly like a schema bump.  The
+    identity instance (no ``cost_coeffs.json``) reproduces the
+    hand-tuned model bit-for-bit and leaves cache keys untouched.
+    """
+
+    route_scale: Dict[str, float] = dataclasses.field(default_factory=dict)
+    route_fixed_us: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    skew_imb_knee: float = 1.25
+    skew_imb_slope: float = 0.35
+    skew_cv_knee: float = 0.25
+    skew_cv_slope: float = 0.15
+    skew_cap: float = 3.0
+    version: int = 0
+    digest: str = ""             # "" == identity (no coefficients file)
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.digest
+
+    def apply(self, route: str, seconds: float) -> float:
+        return (self.route_scale.get(route, 1.0) * seconds
+                + self.route_fixed_us.get(route, 0.0) * 1e-6)
+
+
+IDENTITY_COEFFS = CostCoeffs()
+
+
+def coeffs_digest(routes: Dict[str, dict], skew: Dict[str, float],
+                  version: int) -> str:
+    """Content hash over the values that change estimates (diagnostic
+    fields like per-route n_obs / residuals are excluded, so a refit
+    that lands identical coefficients keeps cached verdicts valid)."""
+    payload = {
+        "version": int(version),
+        "routes": {r: [round(float(v.get("scale", 1.0)), 6),
+                       round(float(v.get("fixed_us", 0.0)), 6)]
+                   for r, v in sorted(routes.items())},
+        "skew": [round(float(skew.get(k, d)), 6) for k, d in
+                 (("imb_knee", 1.25), ("imb_slope", 0.35),
+                  ("cv_knee", 0.25), ("cv_slope", 0.15), ("cap", 3.0))],
+    }
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()[:12]
+
+
+def load_cost_coeffs(path: Optional[str] = None) -> CostCoeffs:
+    """Parse ``cost_coeffs.json`` ($REPRO_COST_COEFFS overrides the
+    committed default location).  Any read/parse failure falls back to
+    the hand-tuned identity -- an installed library without the
+    benchmarks tree keeps working, just uncalibrated."""
+    path = path or os.environ.get(_COEFFS_ENV) or _COEFFS_DEFAULT_PATH
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+        routes = blob.get("routes", {})
+        skew = blob.get("skew", {})
+        version = int(blob.get("version", 1))
+        return CostCoeffs(
+            route_scale={r: float(v.get("scale", 1.0))
+                         for r, v in routes.items()},
+            route_fixed_us={r: float(v.get("fixed_us", 0.0))
+                            for r, v in routes.items()},
+            skew_imb_knee=float(skew.get("imb_knee", 1.25)),
+            skew_imb_slope=float(skew.get("imb_slope", 0.35)),
+            skew_cv_knee=float(skew.get("cv_knee", 0.25)),
+            skew_cv_slope=float(skew.get("cv_slope", 0.15)),
+            skew_cap=float(skew.get("cap", 3.0)),
+            version=version,
+            digest=coeffs_digest(routes, skew, version))
+    except (OSError, ValueError, TypeError, AttributeError):
+        return IDENTITY_COEFFS
+
+
+_coeffs = load_cost_coeffs()
+
+
+def cost_coeffs() -> CostCoeffs:
+    """The active calibration (identity when no coefficients file)."""
+    return _coeffs
+
+
+def set_cost_coeffs(coeffs: Optional[CostCoeffs]):
+    """Install ``coeffs`` as the active calibration (None reloads from
+    disk).  Clears the decision cache: every estimate changes, and the
+    digest component of the cache key changes with it."""
+    global _coeffs
+    _coeffs = coeffs if coeffs is not None else load_cost_coeffs()
+    clear_cache()
+
+
+# ---------------------------------------------------------------------------
 # Decision cache
 # ---------------------------------------------------------------------------
 
@@ -220,6 +335,10 @@ def _cache_key(kind: str, m: int, k: int, n: int, b: int, density: float,
     imb, cv = (round(float(skew[0]), 1), round(float(skew[1]), 1))
     if (imb, cv) != (1.0, 0.0):
         key += ("skew", imb, cv)
+    if not _coeffs.is_identity:
+        # a coefficient refit changes every estimate, so it must orphan
+        # cached verdicts the same way a schema bump does
+        key += ("coeffs", _coeffs.digest)
     return key
 
 
@@ -307,14 +426,28 @@ _SKEW_SENSITIVE = ("static_xla", "static_pallas", "dynamic_xla",
 def _skew_factor(imbalance: float, cv: float) -> float:
     # a uniform random mask carries Poisson sampling noise (imbalance
     # ~1.2, cv ~0.1 at realistic sizes) that the walk absorbs for free;
-    # the dead zones keep that noise from flipping uniform verdicts
-    return min(3.0, 1.0 + 0.35 * max(0.0, imbalance - 1.25)
-               + 0.15 * max(0.0, cv - 0.25))
+    # the dead zones (knees) keep that noise from flipping uniform
+    # verdicts.  Knee/slope/cap come from the active calibration and
+    # default to the hand-tuned constants.
+    c = _coeffs
+    return min(c.skew_cap,
+               1.0 + c.skew_imb_slope * max(0.0, imbalance - c.skew_imb_knee)
+               + c.skew_cv_slope * max(0.0, cv - c.skew_cv_knee))
 
 
 def _estimate(route: str, m: int, k: int, n: int, b: int,
               density: float, dtype, *, imbalance: float = 1.0,
               cv: float = 0.0) -> float:
+    """Calibrated estimate: the hand-tuned kernel-structure time
+    (``_estimate_raw``) corrected by the fitted per-route affine terms.
+    Identity when no ``cost_coeffs.json`` is present."""
+    return _coeffs.apply(route, _estimate_raw(
+        route, m, k, n, b, density, dtype, imbalance=imbalance, cv=cv))
+
+
+def _estimate_raw(route: str, m: int, k: int, n: int, b: int,
+                  density: float, dtype, *, imbalance: float = 1.0,
+                  cv: float = 0.0) -> float:
     """Estimated seconds for one route on the TPU target.  XLA and Pallas
     variants of a family share the kernel-structure estimate; the XLA
     variant carries a small constant penalty so that on equal footing the
@@ -332,8 +465,8 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
     over ``n``, the sampled output is the ``[m, k]`` pattern grid)."""
     parent = _BALANCED_PARENT.get(route)
     if parent is not None:
-        return _estimate(parent, m, k, n, b, density,
-                         dtype) * _BALANCED_OVERHEAD
+        return _estimate_raw(parent, m, k, n, b, density,
+                             dtype) * _BALANCED_OVERHEAD
     skew = (_skew_factor(imbalance, cv)
             if route in _SKEW_SENSITIVE else 1.0)
     bytes_el = max(1, jnp.dtype(dtype).itemsize)

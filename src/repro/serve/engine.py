@@ -121,12 +121,16 @@ class Engine:
         + the per-plan forward/backward route table
         (``sparse.plan_report()`` -- serving plans are forward-only, so
         ``grad`` is absent here unless the engine shares a process with
-        training) -- the serving view of the plan-first lifecycle."""
+        training) + per-plan roofline efficiency with the
+        ``kernel_work`` routes leaving >2x headroom
+        (``sparse.roofline_report()``) -- the serving view of the
+        plan-first lifecycle."""
         return {"startup": dict(self.plan_stats),
                 "now": sparse_api.cache_stats(),
                 "capacity": sparse_api.capacity_report(),
                 "tp": sparse_api.tp_report(),
-                "plans": sparse_api.plan_report()}
+                "plans": sparse_api.plan_report(),
+                "roofline": sparse_api.roofline_report()}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: Request) -> bool:

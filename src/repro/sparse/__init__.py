@@ -40,6 +40,7 @@ from repro.sparse.plan import (  # noqa: F401
     record_dropped,
     reset,
     reset_telemetry,
+    roofline_report,
     spmm,
     spmm_nt,
     tp_report,

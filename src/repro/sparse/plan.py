@@ -233,6 +233,35 @@ def plan_report() -> dict:
     }
 
 
+def roofline_report() -> dict:
+    """Roofline efficiency of every plan this process holds: the chosen
+    route's achieved-vs-bound fraction plus the union of routes flagged
+    for leaving >2x headroom (``kernel_work``) -- the serving engine
+    folds this into ``plan_report()``."""
+    with _plan_lock:
+        plans = list(_plan_cache.values())
+    per = {}
+    flagged = set()
+    for p in plans:
+        r = p.roofline()
+        per[p.key] = {"route": p.route, "chosen": r["chosen"],
+                      "kernel_work": r["kernel_work"]}
+        flagged.update(r["kernel_work"])
+    chosen_eff = [r["chosen"]["efficiency"] for r in per.values()
+                  if r["chosen"]]
+    return {
+        "per_plan": per,
+        "totals": {
+            "plans": len(per),
+            "chosen_flagged": sum(1 for r in per.values()
+                                  if r["chosen"] and r["chosen"]["flagged"]),
+            "min_chosen_efficiency": (round(min(chosen_eff), 4)
+                                      if chosen_eff else None),
+            "kernel_work_routes": sorted(flagged),
+        },
+    }
+
+
 def configure(cache_dir: Optional[str] = None):
     """Set the process-default persistent cache directory."""
     cache_lib.configure(cache_dir)
@@ -339,6 +368,7 @@ class MatmulPlan:
             "tp": self.artifacts.get("tp"),
             "grad": self.artifacts.get("grad"),
             "evolution": self.artifacts.get("evolution"),
+            "roofline": self.roofline(),
             # underscore artifacts are host-side working state (pattern
             # arrays, carry maps), not report material
             "plan": dict({k2: v for k2, v in self.artifacts.items()
@@ -348,6 +378,42 @@ class MatmulPlan:
                               stats=self.capacity_stats.report())
                          if self.capacity_stats is not None else
                          self.artifacts.get("capacity")),
+        }
+
+    def roofline(self, *, flag_headroom: float = 2.0) -> dict:
+        """Per-route roofline efficiency over the raced forward
+        candidates: how close each route's (estimated or measured) time
+        sits to the hardware bound for the work it executes.
+
+        ``routes[r]["flagged"]`` marks routes leaving more than
+        ``flag_headroom``x on the table; ``kernel_work`` collects them
+        -- the sparsity-roofline signal that a route is a kernel to
+        optimize, not a shape to avoid.  TP routes are excluded (their
+        estimates are per-mesh collective times, priced by
+        ``explain()["tp"]`` instead)."""
+        from repro.analysis import roofline as roofline_lib
+        routes = {}
+        for route, est in self.est_seconds.items():
+            if route in TP_ROUTES:
+                continue
+            eff = roofline_lib.route_efficiency(
+                est, self.spec.roofline_cost(route),
+                flag_headroom=flag_headroom)
+            routes[route] = {
+                "achieved_us": round(eff["achieved_seconds"] * 1e6, 3),
+                "bound_us": round(eff["bound_seconds"] * 1e6, 3),
+                "dominant": eff["dominant"],
+                "efficiency": round(eff["efficiency"], 4),
+                "headroom": round(eff["headroom"], 2),
+                "flagged": eff["flagged"],
+            }
+        return {
+            "hw": roofline_lib.V5E.name,
+            "flag_headroom": flag_headroom,
+            "chosen": routes.get(self.route),
+            "routes": routes,
+            "kernel_work": sorted(r for r, e in routes.items()
+                                  if e["flagged"]),
         }
 
     def capacity_report(self) -> Optional[dict]:
@@ -450,6 +516,16 @@ def format_plan(plan: MatmulPlan) -> str:
                 + (", disk-cached" if g.get("from_disk") else "") + ")")
         else:
             extra.append(f"grad: {g.get('mode')}")
+    roof = rep.get("roofline")
+    if roof and roof.get("chosen"):
+        ch = roof["chosen"]
+        line = (f"roofline: {ch['efficiency']:.0%} of "
+                f"{ch['dominant']}-bound ({ch['headroom']:.1f}x headroom"
+                + (", >2x -- kernel work" if ch["flagged"] else "") + ")")
+        others = [r for r in roof["kernel_work"] if r != rep["chosen"]]
+        if others:
+            line += f"; also flagged: {', '.join(others)}"
+        extra.append(line)
     ev = art.get("evolution")
     if ev:
         thr = ev.get("drift_threshold")

@@ -97,6 +97,25 @@ class OpSpec:
                    density=float(density), dtype=jnp.dtype(dtype).name,
                    op=op, mode=mode)
 
+    def roofline_cost(self, route: str) -> dict:
+        """Work cost dict for pricing ``route`` on this problem against
+        the hardware roofline (``analysis.route_efficiency``).  Each
+        route is bounded by the work *it* executes: dense-executing
+        routes (``dense_*``, ``sddmm_dense``) pay the full product,
+        sparse SpMM / SDDMM routes only the pattern's share -- so the
+        headroom flag reads "this kernel is slow for what it does", not
+        "a sparser algorithm exists".  A method, not persisted state:
+        derived entirely from the spec fields, so it stays out of the
+        plan fingerprint and the on-disk schema."""
+        from repro.analysis import hlo_cost
+        bytes_el = max(1, jnp.dtype(self.dtype).itemsize)
+        d = 1.0 if (self.kind == "dense" or route.startswith("dense")
+                    or route == "sddmm_dense") else self.density
+        build = (hlo_cost.sddmm_cost_dict
+                 if route in dispatch.SDDMM_ROUTES
+                 else hlo_cost.spmm_cost_dict)
+        return build(self.m, self.k, self.n, density=d, bytes_el=bytes_el)
+
 
 def _default_cache_dir() -> Optional[str]:
     return os.environ.get("REPRO_CACHE_DIR") or None

@@ -560,6 +560,10 @@ def test_engine_builds_plans_at_startup_and_stays_decision_free():
     # aggregated capacity/overflow telemetry rides along (per-plan
     # planned-bucket stats + MoE drops; totals always present)
     assert "totals" in rep["capacity"]
+    # roofline efficiency of every held plan rides along too
+    assert rep["roofline"]["totals"]["plans"] > 0
+    eff = rep["roofline"]["totals"]["min_chosen_efficiency"]
+    assert eff is None or 0 < eff <= 1.0
 
 
 # -- tensor-parallel plans: measured race, mesh-keyed cache, TP report --------

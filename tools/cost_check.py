@@ -1,0 +1,189 @@
+"""Cost-model accuracy gate: replay the committed benchmark corpus
+through the *calibrated* dispatch estimates and fail when the model
+stops being trustworthy.
+
+    PYTHONPATH=src python tools/cost_check.py [--report cost_report.json]
+    PYTHONPATH=src python tools/cost_check.py \
+        --corpus benchmarks/out/BENCH_*.json --max-median-err 0.15
+
+Sibling of ``tools/bench_check.py``, but checking the opposite
+direction: bench_check asks "did the *numbers* move?", cost_check asks
+"does the *model* still predict them?".  Two blocking criteria (the
+ROADMAP's "trusted to ~10%" bar, with margin):
+
+1. **Median relative error** of calibrated-predicted vs corpus time
+   over every (route, shape) observation must stay <= ``15%``
+   (``--max-median-err``).  Per-route medians ride in the report
+   artifact for triage but do not gate individually -- thin routes
+   (one observation) would make that gate pure noise.
+
+2. **Zero route-crossover flips** on the deterministic grids: for every
+   corpus record that carries a raced candidate set, the calibrated
+   model's argmin over those candidates must equal the corpus argmin.
+   Exact ties (the pallas-off grids tie ``static_pallas`` with
+   ``dense_pallas``) resolve by the record's candidate order -- same
+   rule as ``dispatch.decide`` -- so calibration snapping to identity
+   keeps them stable by construction.
+
+Exit codes: 0 pass, 1 gate failure, 2 cannot run (no
+``cost_coeffs.json`` -- fit one with
+``python -m repro.analysis.calibrate --update`` and commit it; a
+refreshed coefficients file is a baseline re-sign, see docs/dev.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# benchmarks.cost_model must be importable or _estimate silently prices
+# through its crude roofline fallback and this gate measures the wrong
+# model; repo root (for benchmarks/) + src/ (for repro) both join the
+# path, matching benchmarks/run.py
+_REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.analysis import calibrate                      # noqa: E402
+from repro.core import dispatch                           # noqa: E402
+
+COEFFS_PATH = (os.environ.get(dispatch._COEFFS_ENV)
+               or calibrate.DEFAULT_OUT)
+
+
+def _predict_us(o: calibrate.Observation) -> float:
+    return dispatch._estimate(
+        o.route, o.m, o.k, o.n, o.b, o.density, o.dtype,
+        imbalance=o.imbalance, cv=o.cv) * 1e6
+
+
+def _argmin_stable(times: dict) -> str:
+    """First-wins argmin over candidate insertion order -- the same tie
+    rule as ``dispatch.decide`` (min() keeps the earliest key on exact
+    ties), so a tied race never reads as a flip."""
+    return min(times, key=times.get)
+
+
+def _crossover_flips(files: list) -> list:
+    """Replay every candidates-bearing corpus record: the calibrated
+    argmin must match the corpus argmin."""
+    flips = []
+    for path in files:
+        with open(path) as f:
+            blob = json.load(f)
+        groups = blob.items() if isinstance(blob, dict) else [(None, blob)]
+        for fig, recs in groups:
+            for rec in recs:
+                cands = rec.get("candidates")
+                if not cands:
+                    continue
+                known = {r: us for r, us in cands.items()
+                         if r in calibrate._KNOWN_ROUTES}
+                if len(known) < 2:
+                    continue
+                m = int(rec["m"])
+                imb = float(rec.get("imbalance", 1.0))
+                cv = float(rec.get("cv", 0.0))
+                pred = {r: _predict_us(calibrate.Observation(
+                            fig=fig or rec.get("fig", ""), route=r,
+                            m=m, k=m, n=int(rec["n"]), b=int(rec["b"]),
+                            density=float(rec["density"]),
+                            imbalance=imb, cv=cv))
+                        for r in known}
+                want, got = _argmin_stable(known), _argmin_stable(pred)
+                if want != got:
+                    flips.append({
+                        "file": os.path.basename(path),
+                        "fig": fig or rec.get("fig", ""),
+                        "point": f"m={m} b={rec['b']} "
+                                 f"d={rec['density']} n={rec['n']}",
+                        "corpus": want, "model": got,
+                        "corpus_us": known, "model_us":
+                            {r: round(v, 3) for r, v in pred.items()},
+                    })
+    return flips
+
+
+def run_check(extra_corpus=None, max_median_err: float = 0.15) -> dict:
+    """-> report dict with ``pass`` plus per-route error detail."""
+    obs = calibrate.load_corpus(extra_corpus)
+    per_route: dict = {}
+    errs = []
+    for o in obs:
+        rel = abs(_predict_us(o) - o.measured_us) / max(o.measured_us,
+                                                        1e-9)
+        errs.append(rel)
+        per_route.setdefault(o.route, []).append(rel)
+
+    def _med(v):
+        v = sorted(v)
+        n = len(v)
+        return v[n // 2] if n % 2 else 0.5 * (v[n // 2 - 1] + v[n // 2])
+
+    files = sorted(calibrate.glob.glob(
+        os.path.join(calibrate.BASELINE_DIR, "BENCH_*.json")))
+    for p in extra_corpus or ():
+        files.extend(sorted(calibrate.glob.glob(p)))
+    flips = _crossover_flips(files)
+    median = _med(errs) if errs else float("inf")
+    coeffs = dispatch.cost_coeffs()
+    return {
+        "pass": bool(median <= max_median_err and not flips and errs),
+        "n_obs": len(obs),
+        "median_rel_err": round(median, 6),
+        "max_median_err": max_median_err,
+        "per_route": {r: {"n_obs": len(v),
+                          "median_rel_err": round(_med(v), 6),
+                          "max_rel_err": round(max(v), 6)}
+                      for r, v in sorted(per_route.items())},
+        "crossover_flips": flips,
+        "coeffs": {"digest": coeffs.digest, "version": coeffs.version,
+                   "identity": coeffs.is_identity},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="gate dispatch cost-model accuracy on the bench corpus")
+    ap.add_argument("--corpus", nargs="*", default=None, metavar="GLOB",
+                    help="extra bench JSONs beyond benchmarks/baselines/ "
+                         "(nightly passes the full-grid run outputs)")
+    ap.add_argument("--max-median-err", type=float, default=0.15)
+    ap.add_argument("--report", default=None,
+                    help="write the full per-route error report here")
+    args = ap.parse_args()
+
+    if not os.path.exists(COEFFS_PATH):
+        print(f"cost_check: NO COEFFICIENTS at "
+              f"{os.path.relpath(COEFFS_PATH)} -- fit and commit one:\n"
+              f"  PYTHONPATH=src python -m repro.analysis.calibrate "
+              f"--update")
+        return 2
+    rep = run_check(args.corpus, args.max_median_err)
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+    print(f"cost_check: {rep['n_obs']} observations, median rel err "
+          f"{rep['median_rel_err']:.4%} (gate {rep['max_median_err']:.0%}),"
+          f" {len(rep['crossover_flips'])} crossover flips "
+          f"[coeffs {rep['coeffs']['digest']}]")
+    for route, d in rep["per_route"].items():
+        print(f"  {route:28s} n={d['n_obs']:<3d} "
+              f"median={d['median_rel_err']:.4%} "
+              f"max={d['max_rel_err']:.4%}")
+    for flip in rep["crossover_flips"]:
+        print(f"  FLIP {flip['fig']}[{flip['point']}]: corpus picks "
+              f"{flip['corpus']}, model picks {flip['model']}")
+    if not rep["pass"]:
+        print("cost_check: FAIL -- re-fit with `python -m "
+              "repro.analysis.calibrate --update` (and `re-sign` in the "
+              "PR title) if the model legitimately changed")
+        return 1
+    print("cost_check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
