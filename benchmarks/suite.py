@@ -595,6 +595,131 @@ def skewed_patterns(tiny: bool = False):
     return recs
 
 
+# -- serving: sustained throughput at a latency SLO (PR 10) -------------------------------
+
+def _sparsify_ffn(cfg, density):
+    """The paper's static block-sparse FFN applied to a dense config --
+    the serving benchmark's sparse arm prices the stack the engine
+    would actually serve."""
+    import dataclasses
+    groups = tuple(
+        (tuple(dataclasses.replace(s, ffn="sparse")
+               for s in period), rep)
+        for period, rep in cfg.groups)
+    return dataclasses.replace(cfg, groups=groups, ffn_density=density)
+
+
+def _serve_sim(shapes, buckets, lens, max_new, batch):
+    """Deterministic continuous-batching simulation on a cost-model
+    virtual clock: admissions pay the bucketed prefill price, every
+    decode tick prices the live batch through the stack
+    (``dispatch.price_tokens`` -- the engine's own admission pricing).
+    Returns (total_s, p99_step_s, pad_tokens, prompt_tokens)."""
+    price = {}
+
+    def _p(n):
+        if n not in price:
+            price[n] = dispatch.price_tokens(shapes, n)
+        return price[n]
+
+    queue = [(int(s), max_new) for s in lens]
+    live = []                      # remaining decode tokens per slot
+    clock = 0.0
+    pad = prompt = 0
+    step_times = []
+    while queue or live:
+        while queue and len(live) < batch:
+            s, new = queue.pop(0)
+            bucket = next((b for b in buckets if b >= s), buckets[-1])
+            clock += _p(bucket)
+            pad += bucket - s
+            prompt += s
+            # the prefill-generated token counts toward max_new_tokens
+            # (the engine's termination contract)
+            if new - 1 > 0:
+                live.append(new - 1)
+        if live:
+            dt = _p(len(live))
+            clock += dt
+            step_times.append(dt)
+            live = [r - 1 for r in live if r > 1]
+    p99 = (float(np.percentile(np.asarray(step_times), 99))
+           if step_times else 0.0)
+    return clock, p99, pad, prompt
+
+
+def serving_throughput(tiny: bool = False):
+    """Sustained serving throughput: requests/sec at an inter-token
+    latency SLO, on the calibrated cost model's virtual clock (fully
+    deterministic -- no wall clock, seeded request stream).  Uses the
+    engine's own machinery (``_stack_shapes`` pricing proxy +
+    ``_auto_buckets`` cost-model bucket ladder), so the gate covers the
+    serving layer's analytic decisions:
+
+    * ``rps_at_slo``             best requests/sec over the batch sweep
+                                 among batches whose p99 step latency
+                                 meets the SLO (4x the single-token
+                                 step on the DENSE stack, fixed per
+                                 model so the sparse arm's win shows as
+                                 throughput, not a laxer SLO);
+    * ``throughput_vs_padmax``   bucketed ladder vs pad-everything-to-
+                                 max (the bucketing win);
+    * ``serving_speedup_vs_dense`` sparse-FFN arm vs the dense arm at
+                                 the same SLO (the paper's speedup
+                                 surviving end-to-end serving).
+    """
+    from repro import configs
+    from repro.serve.engine import _auto_buckets, _stack_shapes
+    recs = []
+    models = ("llama3_2_1b",) if tiny else ("llama3_2_1b",
+                                            "qwen2_1_5b")
+    max_len = 2048 if tiny else 4096
+    n_req = 64 if tiny else 256
+    max_new = 64
+    for name in models:
+        cfg = configs.get(name)
+        dense_shapes = _stack_shapes(cfg)
+        slo = 4.0 * dispatch.price_tokens(dense_shapes, 1)
+        rng = np.random.default_rng(0)
+        lens = rng.integers(16, max_len - 1, size=n_req)
+        dense_rps = None
+        for ffn, c in (("dense", cfg),
+                       ("sparse_1_8", _sparsify_ffn(cfg, 1 / 8))):
+            shapes = _stack_shapes(c)
+            buckets = _auto_buckets(max_len - 1, shapes, 0.5)
+            best = None
+            sweep = {}
+            for batch in (4, 8, 16, 32):
+                total, p99, pad, prompt = _serve_sim(
+                    shapes, buckets, lens, max_new, batch)
+                rps = n_req / total
+                sweep[batch] = {"rps": round(rps, 3),
+                                "p99_step_us": round(p99 * 1e6, 3)}
+                if p99 <= slo and (best is None or rps > best[1]):
+                    best = (batch, rps, p99, pad, prompt)
+            batch, rps, p99, pad, prompt = best
+            pm_total, _, _, _ = _serve_sim(
+                shapes, (max_len - 1,), lens, max_new, batch)
+            rec = dict(
+                fig="serving", model=name, ffn=ffn, max_len=max_len,
+                n_req=n_req, max_new=max_new,
+                buckets=[int(b) for b in buckets],
+                slo_us=round(slo * 1e6, 3),
+                batch_at_slo=batch,
+                rps_at_slo=round(rps, 3),
+                p99_step_us=round(p99 * 1e6, 3),
+                padding_waste_frac=round(pad / (pad + prompt), 4),
+                throughput_vs_padmax=round(rps / (n_req / pm_total), 3),
+                sweep=sweep)
+            if ffn == "dense":
+                dense_rps = rps
+            else:
+                rec["serving_speedup_vs_dense"] = round(
+                    rps / dense_rps, 3)
+            recs.append(rec)
+    return recs
+
+
 # -- occupancy: the TPU-specific axis (DESIGN.md §2) --------------------------------------
 
 def occupancy_study():
@@ -626,8 +751,10 @@ ALL = {
     "train_grad": train_grad,
     "pattern_evolution": pattern_evolution,
     "skewed_patterns": skewed_patterns,
+    "serving": serving_throughput,
 }
 
 # experiments with a reduced CI smoke grid (benchmarks.run --tiny)
 TINY_CAPABLE = ("dispatch", "grouped_capacity", "tp_crossover",
-                "train_grad", "pattern_evolution", "skewed_patterns")
+                "train_grad", "pattern_evolution", "skewed_patterns",
+                "serving")

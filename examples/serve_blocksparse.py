@@ -23,9 +23,13 @@ def main():
     params = lm.init(jax.random.PRNGKey(0))
 
     print("== continuous batching: 6 requests through 2 slots ==")
-    eng = Engine(lm, params, batch=2, max_len=96)
+    eng = Engine(lm, params, batch=2, max_len=96, warm_compile=True,
+                 replanner=True, replanner_interval=0.05)
     print(f"  plan-first startup: {eng.plan_stats['plans_built']} matmul "
-          f"plans built before the first request (decode program)")
+          f"plans built before the first request (decode + every "
+          f"prefill bucket)")
+    print(f"  analytic bucket ladder: {list(eng.buckets)} -- prefill "
+          f"compiles once per bucket, not once per prompt length")
     reqs = [Request(uid=i,
                     prompt=np.random.default_rng(i).integers(
                         0, cfg.vocab_size, size=8 + 4 * i),
@@ -33,10 +37,19 @@ def main():
             for i in range(6)]
     order = []
     eng.run(reqs, on_finish=lambda r: order.append(r.uid))
+    eng.stop_replanner()
     for r in reqs:
-        print(f"  req {r.uid}: prompt {len(r.prompt)} toks -> "
-              f"{len(r.output)} generated {r.output[:8]}...")
+        print(f"  req {r.uid}: prompt {len(r.prompt)} toks -> bucket "
+              f"{r.bucket}, {len(r.output)} generated {r.output[:8]}...")
     print(f"  finish order: {order} (shorter budgets finish first)")
+    st = eng.stats()
+    pad = st["padding"]
+    print(f"  live stats: {st['steps']} decode steps, step p50 "
+          f"{st['step_latency']['p50_ms']}ms; padding "
+          f"{pad['pad_tokens']}/{pad['pad_tokens'] + pad['prompt_tokens']} "
+          f"tokens (waste_frac {pad['waste_frac']}); re-planner swept "
+          f"{st['replanner']['sweeps']}x, upgraded "
+          f"{st['replanner']['upgrades']} analytic verdicts")
 
     print("== retained-block cache: decode far past the cache length ==")
     import dataclasses

@@ -445,6 +445,29 @@ def _estimate(route: str, m: int, k: int, n: int, b: int,
         route, m, k, n, b, density, dtype, imbalance=imbalance, cv=cv))
 
 
+def price_tokens(shapes, n_tokens: int, *, dtype="float32",
+                 route: str = "dense_xla") -> float:
+    """Calibrated model-seconds for pushing ``n_tokens`` tokens through a
+    stack of ``[m, k]`` matmuls -- the serving engine's admission /
+    padding price.
+
+    ``shapes`` is an iterable of ``(m, k)`` pairs (one per matmul the
+    token batch flows through; repeated layers repeat their pairs).
+    Prices with the same calibrated ``_estimate`` the dispatch race
+    uses -- ``cost_coeffs.json`` corrections included -- so a bucket
+    choice priced here is consistent with the verdicts the plans
+    themselves were raced on.  Analytic by construction: pricing an
+    admission decision must never trigger a measurement.
+    """
+    n_tokens = int(n_tokens)
+    if n_tokens <= 0:
+        return 0.0
+    total = 0.0
+    for m, k in shapes:
+        total += _estimate(route, int(m), int(k), n_tokens, 1, 1.0, dtype)
+    return total
+
+
 def _estimate_raw(route: str, m: int, k: int, n: int, b: int,
                   density: float, dtype, *, imbalance: float = 1.0,
                   cv: float = 0.0) -> float:

@@ -187,15 +187,33 @@ class LM:
                                     memory_len=memory_len)
 
     def prefill(self, params, tokens, *, max_len: int, frontend=None,
-                enc_frames=None, schedule=None):
-        """Returns (last-token logits [B, V], populated caches)."""
+                enc_frames=None, schedule=None, last_index=None):
+        """Returns (last-token logits [B, V], populated caches).
+
+        ``last_index`` (``[B]`` int32, optional) gathers the logits at a
+        per-row position instead of the literal last one -- the serving
+        engine's bucketed prefill pads prompts up to a shape bucket, so
+        the *true* last prompt token sits at ``len(prompt) - 1``, not at
+        ``bucket - 1``.  Indices are into the (frontend-concatenated)
+        sequence; a traced value is fine (dynamic gather, no recompile
+        per prompt length).  Causality makes the pad suffix inert here:
+        positions ``<= last_index`` never attend to it, and decode masks
+        cache slots ``> position``, so padded rows are never read before
+        they are overwritten."""
         cfg = self.cfg
         h, positions, memory, n_prefix = self._prepare(
             params, tokens, frontend, enc_frames)
         h, caches = tfm.stack_prefill(params["stack"], cfg, h,
                                       positions=positions, max_len=max_len,
                                       memory=memory, schedule=schedule)
-        h = rms_norm(params["final_norm"], h[:, -1:], eps=cfg.norm_eps,
+        if last_index is None:
+            h = h[:, -1:]
+        else:
+            idx = jnp.asarray(last_index, jnp.int32).reshape(-1, 1, 1)
+            h = jnp.take_along_axis(
+                h, jnp.broadcast_to(idx, (h.shape[0], 1, h.shape[2])),
+                axis=1)
+        h = rms_norm(params["final_norm"], h, eps=cfg.norm_eps,
                      plus_one=cfg.post_norm)
         return self._unembed(params, h)[:, 0], caches
 

@@ -26,6 +26,7 @@ entry points remain as deprecation shims that build-and-call a plan.
 from repro.sparse.cache import SCHEMA_VERSION  # noqa: F401
 from repro.sparse.plan import (  # noqa: F401
     MatmulPlan,
+    analytic_plans,
     batched_matmul,
     cache_stats,
     capacity_report,
@@ -37,7 +38,9 @@ from repro.sparse.plan import (  # noqa: F401
     matmul,
     plan,
     plan_report,
+    pool_plans,
     record_dropped,
+    remeasure_plan,
     reset,
     reset_telemetry,
     roofline_report,

@@ -64,6 +64,20 @@ _capacity_lock = threading.Lock()
 _evolution_totals: Dict[str, int] = {"evolves": 0, "reraces": 0,
                                      "drift_trips": 0}
 
+# serving-engine plan pools: ctx.pool label -> mem_keys of every plan
+# built under that label.  Pool membership is runtime-only bookkeeping
+# (the label joins neither the disk fingerprint nor the mem key -- see
+# spec.PlanContext), so the engine can enumerate "my plans" without
+# owning plan identity.  Guarded by _plan_lock.
+_pool_registry: Dict[str, list] = {}
+
+# background re-planner verdict overlay: persistent key string -> the
+# upgraded (measured) decision record.  _decide consults this BEFORE
+# the disk cache, so re-planned verdicts win even when persistence is
+# off for the process; remeasure_plan also writes the record to disk
+# when persistence is on, mirroring the escalation guardrail.
+_replanned: Dict[str, dict] = {}
+
 
 def reset(*, counters: bool = True):
     """Forget every in-memory plan, decision, capacity stat, and
@@ -74,6 +88,8 @@ def reset(*, counters: bool = True):
         _shard_meta_cache.clear()
         _transpose_cache.clear()
         _sddmm_meta_cache.clear()
+        _pool_registry.clear()
+        _replanned.clear()
         for k in _evolution_totals:
             _evolution_totals[k] = 0
     with _capacity_lock:
@@ -260,6 +276,130 @@ def roofline_report() -> dict:
             "kernel_work_routes": sorted(flagged),
         },
     }
+
+
+def pool_plans(pool: str) -> list:
+    """Every live plan built under ``ctx.pool == pool``, in build order.
+    Plans evicted from the in-memory cache (capacity escalation, a
+    re-planner upgrade) drop out until the holder rebuilds them."""
+    with _plan_lock:
+        keys = list(_pool_registry.get(pool, ()))
+        plans = [_plan_cache.get(k) for k in keys]
+    return [p for p in plans if p is not None]
+
+
+def _remeasurable(p: "MatmulPlan") -> bool:
+    """Can the background re-planner wall-clock this plan?  Analytic
+    forward verdicts only; TP plans are excluded (their race needs the
+    real mesh installed -- the foreground ``measure=True`` path owns
+    that); spec-only static plans have no pattern to synthesize."""
+    if p.source != "analytic" or p.key in _replanned:
+        return False
+    if p.ctx.resolved_tp_q():
+        return False
+    if p.spec.kind == "static" and p.pattern is None:
+        return False
+    return True
+
+
+def analytic_plans(pool: Optional[str] = None) -> list:
+    """The re-planner's worklist: live plans whose forward verdict is
+    still analytic (cost-model priced, never wall-clocked) and that
+    ``remeasure_plan`` can upgrade.  ``pool`` restricts to one serving
+    engine's plans; None scans the whole process."""
+    if pool is not None:
+        plans = pool_plans(pool)
+    else:
+        with _plan_lock:
+            plans = list(_plan_cache.values())
+    return [p for p in plans if _remeasurable(p)]
+
+
+def _synth_inputs(spec: OpSpec, pattern, seed: int):
+    """Concrete ``(operand, x)`` realizing the plan's spec, for the
+    background measurement race.  Route timing depends on shapes,
+    density, and pattern layout -- not values -- so synthesized normal
+    values measure what the foreground race would have."""
+    kv, kp = jax.random.split(jax.random.PRNGKey(seed))
+    dt = jnp.dtype(spec.dtype)
+    if not jnp.issubdtype(dt, jnp.floating):
+        dt = jnp.dtype("float32")
+    x = jax.random.normal(kv, (spec.k, spec.n), dt)
+    b = spec.block_size
+    if spec.kind == "dense":
+        return jax.random.normal(kp, (spec.m, spec.k), dt), x
+    if spec.kind == "static":
+        rows, cols = pattern
+        mask = np.zeros((spec.m // b, spec.k // b), bool)
+        mask[np.asarray(rows), np.asarray(cols)] = True
+        return BlockSparseMatrix.from_mask(mask, b, dtype=dt,
+                                           init="normal", key=kp), x
+    # dynamic: capacity-shaped operand at the spec's d_max density
+    from repro.core import masks
+    mask = masks.random_block_mask(spec.m, spec.k, b, spec.density,
+                                   seed=seed)
+    rows, cols = np.nonzero(mask)
+    cap = max(1, len(rows))
+    operand = DynamicOperand(
+        values=jax.random.normal(kp, (cap, b, b), dt),
+        row_idx=jnp.asarray(rows.astype(np.int32)),
+        col_idx=jnp.asarray(cols.astype(np.int32)),
+        nnz=jnp.asarray(len(rows), jnp.int32),
+        shape=(spec.m, spec.k), block_size=b)
+    return operand, x
+
+
+def remeasure_plan(p: "MatmulPlan", *, reps: int = 3,
+                   seed: int = 0) -> Optional[dict]:
+    """Upgrade one plan's analytic forward verdict to a measured one --
+    the serving engine's background re-planner body.  Wall-clocks every
+    runnable candidate on synthesized inputs of the plan's spec (the
+    same harness as the foreground ``measure=True`` race), installs the
+    winning verdict in the ``_replanned`` overlay + the disk cache (when
+    persistence is on), and evicts the stale plan from the in-memory
+    cache so the holder's next ``plan()`` call adopts the measured
+    route.  Already-compiled closures keep running the analytic route --
+    upgrades apply to new traces, exactly like capacity escalation.
+
+    Returns ``{key, route_before, route_after, measured, upgraded}`` or
+    None when the plan is not remeasurable (already measured / TP /
+    spec-only static)."""
+    if not _remeasurable(p):
+        return None
+    spec, ctx = p.spec, p.ctx
+    dctx = _selection_ctx(spec, ctx)
+    operand, x = _synth_inputs(spec, p.pattern, seed)
+    cands = dispatch._candidates(spec.kind, dctx)
+    runnable = [r for r in cands if dispatch._executable(r, dctx)]
+    if not runnable:
+        return None
+    measured = {r: dispatch._measure_route(r, operand, x, dctx,
+                                           reps=reps)
+                for r in runnable}
+    cache_lib.bump("measurements")
+    est = dict(p.est_seconds)
+    est.update(measured)
+    route = min(measured, key=measured.get)
+    rec = {"route": route, "source": "measured",
+           "est_seconds": {r: float(s) for r, s in est.items()}}
+    cap = p.artifacts.get("capacity")
+    if cap:
+        rec["capacity"] = {k2: v for k2, v in cap.items()
+                           if k2 != "escalated"}
+    grad_art = p.artifacts.get("grad")
+    if grad_art and grad_art.get("mode") == "planned" \
+            and "dx" in grad_art and _grad_covered(spec, ctx):
+        rec["grad"] = {side: dict(grad_art[side])
+                       for side in ("dx", "dvalues")}
+    with _plan_lock:
+        _replanned[p.key] = rec
+        for mk in [mk for mk, q in _plan_cache.items() if q is p]:
+            _plan_cache.pop(mk, None)
+    if ctx.cache and ctx.persistence_on():
+        cache_lib.store_decision(ctx.resolved_cache_dir(), p.key, rec)
+    return {"key": p.key, "route_before": p.route, "route_after": route,
+            "measured": {r: float(s) for r, s in measured.items()},
+            "upgraded": True}
 
 
 def configure(cache_dir: Optional[str] = None):
@@ -736,6 +876,16 @@ def _decide(spec: OpSpec, ctx: PlanContext, operand: Optional[Operand],
     capacity and grad sections -- are built)."""
     dctx = _selection_ctx(spec, ctx)
     key = cache_lib.key_string(_fingerprint(spec, ctx, operand))
+    # background re-planner overlay first: an in-process upgraded
+    # verdict wins over both the disk record (which store_decision has
+    # already overwritten when persistence is on) and a fresh race
+    rec = _replanned.get(key)
+    if rec is not None and rec.get("route") in PLAN_ROUTES:
+        return (rec["route"], dict(rec.get("est_seconds", {})),
+                rec.get("source", "measured"), True,
+                rec.get("capacity"),
+                rec.get("tp_source", rec.get("source")),
+                rec.get("grad"))
     use_disk = ctx.cache and ctx.persistence_on()
     if use_disk:
         rec = cache_lib.load_decision(ctx.resolved_cache_dir(), key)
@@ -1738,6 +1888,11 @@ def plan(operand_or_spec, n: Optional[int] = None, *, x=None,
     # _mem_key / _fingerprint
     mem_key = _mem_key(fp, pkey, ctx)
     if ctx.cache:
+        if ctx.pool:
+            with _plan_lock:
+                keys = _pool_registry.setdefault(ctx.pool, [])
+                if mem_key not in keys:
+                    keys.append(mem_key)
         hit = _plan_cache.get(mem_key)
         if hit is not None:
             cache_lib.bump("plan_hits")

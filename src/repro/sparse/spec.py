@@ -297,6 +297,19 @@ class PlanContext:
                   plan-cache key, not the disk fingerprint); the value
                   and the observed drift are recorded in the decision
                   record's evolution lineage.
+
+    Bucket-pool key (the serving engine's plan enumeration):
+
+    pool          optional label grouping every plan built under this
+                  context into a named *plan pool*
+                  (``sparse.pool_plans(name)``).  The serving engine
+                  tags each shape bucket's programs with its own pool so
+                  the background re-planner and the stats endpoint can
+                  enumerate exactly *their* plans instead of the
+                  process-global cache.  Runtime-only: a label, not an
+                  identity -- it joins neither the disk fingerprint nor
+                  the in-memory plan-cache key, so pooled and unpooled
+                  callers share one plan per problem.
     """
 
     mode: str = "auto"
@@ -319,6 +332,7 @@ class PlanContext:
     grad_mode: str = "auto"
     sddmm_mode: str = "auto"
     evolve_drift: Optional[float] = 0.25
+    pool: Optional[str] = None
 
     def __post_init__(self):
         if self.evolve_drift is not None and self.evolve_drift < 0:

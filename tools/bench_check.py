@@ -38,6 +38,12 @@ noise -- so a 15% tolerance is a real gate, not flake insurance:
                         route at each skew point (a skew crossover that
                         stops picking the balanced variant flips the
                         route gate).
+* ``serving``           sustained requests/sec at the inter-token
+                        latency SLO on the cost-model virtual clock,
+                        the bucketed-vs-pad-to-max advantage, and the
+                        sparse-vs-dense serving speedup; the analytic
+                        bucket ladder + SLO-chosen batch ride the route
+                        gate.
 
 A config present in the baseline but missing from the current run (or
 vice versa) fails: a silently shrunk grid is a coverage regression.
@@ -122,6 +128,27 @@ def _skewed_ratios(recs):
     return out
 
 
+def _serving_ratios(recs):
+    # three gated ratios per serving arm, all deterministic cost-model
+    # outputs: sustained requests/sec at the SLO (absolute model-seconds
+    # throughput), the bucketed-vs-pad-to-max advantage, and (sparse
+    # arms) the sparse-vs-dense serving speedup.  The "route" is the
+    # engine's analytic bucket ladder + the SLO-chosen batch -- a ladder
+    # or batch flip at the same grid point is a serving-policy
+    # regression, exactly what this gate exists to catch
+    out = {}
+    for r in recs:
+        k = _key(r, ("model", "ffn", "max_len"))
+        ladder = "/".join(str(b) for b in r["buckets"])
+        out[f"{k}|rps"] = {"ratio": r["rps_at_slo"],
+                           "route": f"b{ladder}@{r['batch_at_slo']}"}
+        out[f"{k}|padmax"] = {"ratio": r["throughput_vs_padmax"]}
+        if "serving_speedup_vs_dense" in r:
+            out[f"{k}|vs_dense"] = {
+                "ratio": r["serving_speedup_vs_dense"]}
+    return out
+
+
 EXTRACTORS = {
     "dispatch": _dispatch_ratios,
     "grouped_capacity": _capacity_ratios,
@@ -129,6 +156,7 @@ EXTRACTORS = {
     "train_grad": _train_grad_ratios,
     "pattern_evolution": _pattern_evolution_ratios,
     "skewed_patterns": _skewed_ratios,
+    "serving": _serving_ratios,
 }
 
 # runner-dependent fields stripped from baselines on --update, so a
@@ -146,6 +174,7 @@ STRIP_FIELDS = {
     # only the capped replan_vs_evolve ratio
     "pattern_evolution": ("evolve_ms", "replan_ms"),
     "skewed_patterns": (),     # all fields are deterministic model outputs
+    "serving": (),             # virtual-clock simulation: deterministic
 }
 
 
